@@ -1,0 +1,25 @@
+"""Section 3.1 analysis: large nodes + shortcuts fetch fewer bytes per
+search than small whole-node trees, and need ~4x less interior cache.
+This is the paper's analytic claim, reproduced from the same geometry."""
+from __future__ import annotations
+
+from repro.core import HoneycombConfig
+from .common import bytes_model_honeycomb, bytes_model_wholenode, emit
+
+
+def run() -> dict:
+    cfg = HoneycombConfig()
+    out = {}
+    for height in (3, 4, 5):
+        shortcut = bytes_model_honeycomb(cfg, height)
+        whole = bytes_model_wholenode(cfg, height)
+        out[height] = {"shortcut_bytes": shortcut, "whole_bytes": whole,
+                       "ratio": shortcut / whole}
+        emit(f"bytes_h{height}", 0.0,
+             f"shortcut={shortcut} whole={whole} "
+             f"ratio={shortcut / whole:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

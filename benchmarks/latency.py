@@ -1,0 +1,35 @@
+"""Fig. 12: latency-throughput.  Load is swept via device batch size; we
+report median per-op latency at each offered batch (read-only 3-item
+scans, the figure's workload)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import build_stores, emit, uniform_sampler
+from repro.core.keys import int_key
+
+
+def run(n_items: int = 4096, reps: int = 8) -> dict:
+    hc, _ = build_stores(n_items, baseline=False)
+    sampler = uniform_sampler(n_items, seed=9)
+    results = {}
+    for batch in (8, 32, 128, 512):
+        lats = []
+        for _ in range(reps):
+            ks = sampler(batch)
+            ranges = [(int_key(int(k)),
+                       int_key(min(int(k) + 3, n_items - 1))) for k in ks]
+            t0 = time.perf_counter()
+            hc.scan_batch(ranges)
+            lats.append((time.perf_counter() - t0) / batch)
+        med = float(np.median(lats)) * 1e6
+        tput = batch / (np.median(lats) * batch)
+        results[batch] = {"median_us_per_op": med, "ops_per_s": tput}
+        emit(f"latency_b{batch}", med, f"ops_s={tput:.0f}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Fig. 17: log-block size sweep.  Bigger log blocks help inserts (fewer
+merges => fewer page-table syncs) and hurt scans (more unsorted bytes per
+leaf read) — the paper picks 512 B; here the analogue knob is log_cap."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import HoneycombConfig, HoneycombStore
+from repro.core.keys import int_key
+from .common import emit, uniform_sampler
+
+
+def run(n_items: int = 2048, n_ops: int = 1024) -> dict:
+    results = {}
+    for log_cap in (2, 8, 16, 32):
+        cfg = HoneycombConfig(log_cap=log_cap)
+        st = HoneycombStore(cfg)
+        rng = np.random.default_rng(0)
+        for i in rng.permutation(n_items):
+            st.put(int_key(int(i)), b"v" * 16)
+        # insert throughput
+        ks = rng.integers(n_items, 2 * n_items, n_ops)
+        t0 = time.perf_counter()
+        for k in ks:
+            st.put(int_key(int(k)), b"v" * 16)
+        ins = n_ops / (time.perf_counter() - t0)
+        syncs = st.tree.pt.sync_commands
+        # 1-item scan throughput
+        st.export_snapshot()
+        sampler = uniform_sampler(n_items, 17)
+        t0 = time.perf_counter()
+        for i in range(0, n_ops, 256):
+            ks2 = [int_key(int(k)) for k in sampler(min(256, n_ops - i))]
+            st.scan_batch([(k, k) for k in ks2])
+        sc = n_ops / (time.perf_counter() - t0)
+        results[log_cap] = {"insert_ops_s": ins, "scan_ops_s": sc,
+                            "pt_syncs": syncs}
+        emit(f"logcap_{log_cap}", 1e6 / ins,
+             f"insert={ins:.0f}/s scan={sc:.0f}/s syncs={syncs}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Roofline table: renders experiments/dryrun.json (written by
+repro.launch.dryrun) into the EXPERIMENTS.md Section Roofline table."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DEFAULT = Path("experiments/dryrun.json")
+
+
+def render(path: Path = DEFAULT, mesh: str = "single") -> str:
+    data = json.loads(Path(path).read_text())
+    rows = []
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | "
+           "dominant | useful | peak GB/chip |")
+    sep = "|" + "---|" * 8
+    rows.append(hdr)
+    rows.append(sep)
+    for key, r in sorted(data.items()):
+        if r.get("status") == "skip":
+            if key.endswith("|single"):
+                rows.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                            f"SKIP | - | - |")
+            continue
+        if r.get("status") != "ok" or not key.endswith(f"|{mesh}"):
+            continue
+        rl = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.3e} | "
+            f"{rl['memory_s']:.3e} | {rl['collective_s']:.3e} | "
+            f"{rl['dominant']} | {rl['useful_ratio']:.2f} | "
+            f"{r['memory']['peak_bytes'] / 2**30:.2f} |")
+    return "\n".join(rows)
+
+
+def run() -> dict:
+    if not DEFAULT.exists():
+        print("roofline,0.00,missing experiments/dryrun.json (run dryrun)")
+        return {}
+    print(render())
+    return {"rendered": True}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Benchmark entry point — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (shared harness contract).
+Absolute CPU-container numbers are not the paper's Mops/s; the reproduced
+artifacts are the relative trends and the analytic byte model — see
+benchmarks/common.py and EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+from . import (bytes_model, cache_lb, cloud_storage, key_size, latency,
+               log_block, mvcc_cost, roofline, scan_size, ycsb)
+
+SECTIONS = [
+    ("fig10_ycsb", ycsb.run),
+    ("fig11_cloud_storage", cloud_storage.run),
+    ("fig12_latency", latency.run),
+    ("fig13_scan_size", scan_size.run),
+    ("fig14_key_size", key_size.run),
+    ("fig15_mvcc", mvcc_cost.run),
+    ("fig16_cache_lb", cache_lb.run),
+    ("fig17_log_block", log_block.run),
+    ("sec3.1_bytes_model", bytes_model.run),
+    ("roofline", roofline.run),
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    results = {}
+    for name, fn in SECTIONS:
+        if only and only not in name:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        t0 = time.perf_counter()
+        try:
+            results[name] = fn()
+        except Exception as e:  # noqa: BLE001 — keep the suite running
+            print(f"{name},0.00,ERROR:{type(e).__name__}:{e}")
+            results[name] = {"error": str(e)}
+        print(f"# {name} took {time.perf_counter() - t0:.1f}s", flush=True)
+    out = Path("experiments/bench_results.json")
+    out.parent.mkdir(exist_ok=True)
+    out.write_text(json.dumps(results, indent=1, default=str))
+    print(f"# results -> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Fig. 13: gains grow with scan size (paper: 4.0x throughput at 24-item
+scans; Honeycomb amortizes node fetches across inlined items while the
+baseline chases per-item pointers)."""
+from __future__ import annotations
+
+from .common import build_stores, emit, run_mixed, uniform_sampler
+
+
+def run(n_items: int = 4096, n_ops: int = 1024) -> dict:
+    results = {}
+    hc, cp = build_stores(n_items)
+    for items in (1, 3, 8, 24):
+        spec = dict(read_frac=1.0, scan_items=items)
+        r_h = run_mixed(hc, uniform_sampler(n_items, seed=11), n_ops=n_ops,
+                        n_items=n_items, **spec)
+        r_c = run_mixed(cp, uniform_sampler(n_items, seed=11), n_ops=n_ops,
+                        n_items=n_items, is_honeycomb=False, **spec)
+        h, c = r_h["ops_per_s"], r_c["ops_per_s"]
+        results[items] = {"honeycomb_ops_s": h, "baseline_ops_s": c,
+                          "speedup": h / c}
+        emit(f"scan_{items}items", 1e6 / h, f"speedup={h / c:.2f}x")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Fig. 10: YCSB A-F, uniform and zipfian, Honeycomb vs CPU baseline.
+
+Workloads (Table 2): A 50/50 update, B 95/5, C read-only, D 95/5 insert,
+E scan-heavy (1..100-item scans, here capped for CPU scale), F
+read-modify-write.  Reported: ops/s and ops/s/W (TDP model from the paper).
+"""
+from __future__ import annotations
+
+from .common import (TDP_BASELINE_W, TDP_HONEYCOMB_W, build_stores, emit,
+                     run_mixed, uniform_sampler, zipf_sampler)
+
+WORKLOADS = {
+    "A": dict(read_frac=0.5, scan_items=0),
+    "B": dict(read_frac=0.95, scan_items=0),
+    "C": dict(read_frac=1.0, scan_items=0),
+    "D": dict(read_frac=0.95, scan_items=0),
+    "E": dict(read_frac=0.95, scan_items=8),
+    "F": dict(read_frac=0.666, scan_items=0),
+}
+
+
+def run(n_items: int = 4096, n_ops: int = 2048) -> dict:
+    results = {}
+    hc, cp = build_stores(n_items)
+    for dist in ("uniform", "zipfian"):
+        for wl, spec in WORKLOADS.items():
+            mk = uniform_sampler if dist == "uniform" else zipf_sampler
+            r_h = run_mixed(hc, mk(n_items, seed=3), n_ops=n_ops,
+                            n_items=n_items, **spec)
+            r_c = run_mixed(cp, mk(n_items, seed=3), n_ops=n_ops,
+                            n_items=n_items, is_honeycomb=False, **spec)
+            h, c = r_h["ops_per_s"], r_c["ops_per_s"]
+            eff_h = h / TDP_HONEYCOMB_W
+            eff_c = c / TDP_BASELINE_W
+            results[f"{wl}/{dist}"] = {
+                "honeycomb_ops_s": h, "baseline_ops_s": c,
+                "speedup": h / c, "eff_ratio": eff_h / eff_c}
+            emit(f"ycsb_{wl}_{dist}", 1e6 / h,
+                 f"speedup={h / c:.2f}x eff={eff_h / eff_c:.2f}x")
+    return results
+
+
+if __name__ == "__main__":
+    run()

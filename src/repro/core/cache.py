@@ -1,0 +1,146 @@
+"""Interior-node cache + load balancer (paper Section 5).
+
+On the FPGA the cache moves interior-node reads from PCIe (slow) to on-board
+DRAM (fast), the root lives in on-chip SRAM, and a load balancer sends some
+cache *hits* back to PCIe when DRAM is saturated so that the two off-chip
+pipes are both busy.
+
+TPU translation: all tree arrays live in HBM, so the tiers become
+  SRAM root cache        ->  root (+ top levels) packed into a small
+                             contiguous array that a Pallas kernel pins in
+                             VMEM via its BlockSpec (no HBM gather for the
+                             first levels of every request)
+  on-board DRAM cache    ->  the packed cache array itself: contiguous,
+                             sequential reads (vs. the random gathers the
+                             heap path costs)
+  PCIe path              ->  random gathers against the full heap arrays
+  load balancer          ->  routes a fraction of cache-hit level lookups to
+                             the heap path to keep both gather pipelines busy
+
+The cache is software-managed on the host: a 4-way set-associative metadata
+table keyed by LID, refreshed at snapshot export, invalidated when the page
+table remaps a LID (Section 5: "the cache entry for the node with that LID
+is invalidated").  Benchmarks meter hit rates and the two paths' byte flows
+to reproduce Fig. 16.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .config import HoneycombConfig
+from .heap import INTERIOR, NULL
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    invalidations: int = 0
+    fast_path_reads: int = 0     # served from the packed cache ("DRAM")
+    slow_path_reads: int = 0     # routed to the heap ("PCIe")
+    fast_bytes: int = 0
+    slow_bytes: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        t = self.hits + self.misses
+        return self.hits / t if t else 0.0
+
+
+class InteriorCache:
+    """4-way set-associative cache of interior nodes, indexed by LID."""
+
+    def __init__(self, cfg: HoneycombConfig):
+        self.cfg = cfg
+        self.sets = max(1, cfg.cache_slots // cfg.cache_ways)
+        self.tag = np.full((self.sets, cfg.cache_ways), NULL, np.int64)
+        self.phys = np.full((self.sets, cfg.cache_ways), NULL, np.int64)
+        self.tick = np.zeros((self.sets, cfg.cache_ways), np.int64)
+        self._clock = 0
+        self._rng = np.random.default_rng(0)
+        self.stats = CacheStats()
+        # packed top-level image: lids present, order = packed slot index
+        self.packed_lids: np.ndarray = np.zeros((0,), np.int64)
+
+    def _set_of(self, lid: int) -> int:
+        return lid % self.sets
+
+    def lookup(self, lid: int, phys: int) -> bool:
+        """Metadata-table probe (Section 5).  A hit requires the cached
+        physical address to match the live page table (the NAT check);
+        mismatches count as misses and invalidate the way."""
+        s = self._set_of(lid)
+        self._clock += 1
+        for w in range(self.cfg.cache_ways):
+            if self.tag[s, w] == lid:
+                if self.phys[s, w] != phys:
+                    self.tag[s, w] = NULL
+                    self.stats.invalidations += 1
+                    break
+                self.tick[s, w] = self._clock
+                self.stats.hits += 1
+                return True
+        self.stats.misses += 1
+        self._fill(lid, phys)
+        return False
+
+    def _fill(self, lid: int, phys: int):
+        """Write-back on miss; random eviction within the set (the paper
+        leaves smarter policies to future work)."""
+        s = self._set_of(lid)
+        for w in range(self.cfg.cache_ways):
+            if self.tag[s, w] == NULL:
+                self.tag[s, w], self.phys[s, w] = lid, phys
+                self.tick[s, w] = self._clock
+                return
+        w = int(self._rng.integers(self.cfg.cache_ways))
+        self.tag[s, w], self.phys[s, w] = lid, phys
+        self.tick[s, w] = self._clock
+
+    def invalidate(self, lid: int):
+        s = self._set_of(lid)
+        for w in range(self.cfg.cache_ways):
+            if self.tag[s, w] == lid:
+                self.tag[s, w] = NULL
+                self.stats.invalidations += 1
+
+    # ------------------------------------------------------- top-level pack
+    def refresh(self, tree):
+        """Rebuild the packed top-level image (root in 'SRAM', next level in
+        'DRAM') at snapshot export; the Pallas read kernel receives it as a
+        VMEM-resident block."""
+        lids = [tree.root_lid]
+        phys = tree.pt.lookup(tree.root_lid)
+        if int(tree.heap.ntype[phys]) == INTERIOR:
+            lids.append(int(tree.heap.left_child[phys]))
+            for i in range(int(tree.heap.nitems[phys])):
+                lids.append(int(tree.heap.svals[phys, i, 0]))
+        self.packed_lids = np.asarray(lids[: self.cfg.cache_slots], np.int64)
+        for lid in self.packed_lids:
+            self.lookup(int(lid), tree.pt.lookup(int(lid)))
+
+    # ----------------------------------------------------- load balancer
+    def route(self, lid: int, phys: int, nbytes: int,
+              fast_inflight: int = 0, slow_inflight: int = 0) -> str:
+        """Load-balanced read routing (Section 5).  Returns 'fast' (cache)
+        or 'slow' (heap/PCIe).  Balances by inflight bytes when telemetry is
+        supplied, else by the configured fraction."""
+        hit = self.lookup(lid, phys)
+        if not hit:
+            path = "slow"
+        elif not self.cfg.load_balance:
+            path = "fast"
+        elif fast_inflight or slow_inflight:
+            path = "fast" if fast_inflight <= slow_inflight else "slow"
+        else:
+            path = "fast" if self._rng.random() < self.cfg.lb_fast_fraction \
+                else "slow"
+        if path == "fast":
+            self.stats.fast_path_reads += 1
+            self.stats.fast_bytes += nbytes
+        else:
+            self.stats.slow_path_reads += 1
+            self.stats.slow_bytes += nbytes
+        return path

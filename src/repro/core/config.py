@@ -1,0 +1,100 @@
+"""Honeycomb store configuration.
+
+Mirrors the paper's node geometry (Section 3.1) adapted to lane-structured
+storage for the TPU (DESIGN.md Section 2).  The paper's byte budgets map to
+fixed-width slots:
+
+  paper                         here
+  -----------------------------------------------------------------
+  8 KB node                     ``node_cap`` sorted items + ``log_cap`` log
+                                entries + ``n_shortcuts`` boundary keys
+  48 B header                   SoA scalar columns (type/version/...)
+  464 B shortcut block          ``n_shortcuts`` keys + segment offsets
+  512 B log threshold           ``log_cap`` entries (merge when full)
+  460 B max key                 ``key_words`` * 4 bytes (big-endian lanes)
+  469 B max inline value        ``val_words`` * 4 bytes, larger values go
+                                to the overflow heap (paper: out-of-node)
+  5 B version delta             32-bit delta; wrap forces a merge, same as
+                                the paper's wrap-forces-merge rule
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HoneycombConfig:
+    # --- node geometry -----------------------------------------------------
+    node_cap: int = 64          # max items in the sorted block
+    log_cap: int = 16           # log entries before a merge is forced
+    n_shortcuts: int = 8        # boundary keys in the shortcut block
+    key_words: int = 8          # key lanes (uint32, big-endian) => 32 B max key
+    val_words: int = 4          # inline value lanes => 16 B inline values
+    min_fill: float = 0.25      # leaf underflow threshold (merge w/ sibling)
+    split_fill: float = 0.5     # target fill of each half after a split
+
+    # --- MVCC / GC ----------------------------------------------------------
+    mvcc: bool = True           # paper Section 3.2; False => version 0 for all
+    max_version_chain: int = 4  # bound on old-version hops a reader may take
+    gc_batch: int = 64          # GC list scan granularity
+
+    # --- read path ----------------------------------------------------------
+    max_height: int = 8         # static traversal bound for the jitted reader
+    max_scan_leaves: int = 4    # sibling hops a single SCAN may take
+    max_scan_items: int = 32    # result slots per SCAN request
+
+    # --- accelerator cache / load balancer (Section 5) ----------------------
+    cache_slots: int = 256      # interior-node cache capacity (packed array)
+    cache_ways: int = 4         # set associativity of the metadata table
+    load_balance: bool = True   # route some cache hits to the slow path
+    lb_fast_fraction: float = 0.75  # fraction of hits served by the cache path
+
+    # --- value overflow heap -----------------------------------------------
+    overflow_words: int = 128   # slot size of the out-of-node value heap
+
+    def __post_init__(self):
+        assert self.node_cap % self.n_shortcuts == 0, (
+            "segments must tile the sorted block")
+        assert self.log_cap <= 255, "order hints are 1 byte (paper Fig. 7)"
+        assert self.node_cap <= 2 ** 15, "back pointers are 2 bytes"
+
+    @property
+    def segment_items(self) -> int:
+        """Items per sorted-block segment (the unit a search fetches)."""
+        return self.node_cap // self.n_shortcuts
+
+    @property
+    def max_key_bytes(self) -> int:
+        return self.key_words * 4
+
+    @property
+    def max_inline_val_bytes(self) -> int:
+        return self.val_words * 4
+
+    # Byte model used by benchmarks to reproduce the paper's bytes-fetched
+    # accounting (Section 3.1: "a search reads at most 1.5 KB of an 8 KB
+    # node").  Sizes are the packed lane widths actually gathered.
+    @property
+    def header_bytes(self) -> int:
+        return 48
+
+    @property
+    def shortcut_bytes(self) -> int:
+        return self.n_shortcuts * (self.max_key_bytes + 4)
+
+    @property
+    def segment_bytes(self) -> int:
+        return self.segment_items * (self.max_key_bytes + self.val_words * 4 + 4)
+
+    @property
+    def log_bytes(self) -> int:
+        return self.log_cap * (self.max_key_bytes + self.val_words * 4 + 12)
+
+    @property
+    def node_bytes(self) -> int:
+        return (self.header_bytes + self.shortcut_bytes
+                + self.node_cap * (self.max_key_bytes + self.val_words * 4 + 4)
+                + self.log_bytes)
+
+
+DEFAULT_CONFIG = HoneycombConfig()

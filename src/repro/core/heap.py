@@ -1,0 +1,175 @@
+"""Node heap: structure-of-arrays storage for B+Tree node buffers.
+
+The paper allocates fixed 8 KB node buffers in pinned host memory and
+addresses them physically (Section 3.1).  Here a *physical slot* is a row
+across a set of packed numpy arrays — the layout the TPU read path and the
+Pallas kernels consume directly.  Buffers are never mutated after they are
+published to readers except for the leaf fast path (log append), exactly
+mirroring the paper: structural changes allocate fresh slots and swap a LID
+mapping (Section 3.4); the in-place log append is made safe by MVCC version
+filtering (Section 3.2).
+
+The 64-bit packed (size, lock, seqno) word of the paper's header is kept as
+``lockword``: bit 63 = lock bit, bits 32..62 = sequence number, low 32 bits =
+bytes-used stand-in (item count).  ``try_lock`` implements the
+compare-and-swap-with-expected-seqno protocol of Section 3.4.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .config import HoneycombConfig
+
+INTERIOR, LEAF = 0, 1
+NULL = -1
+
+# log entry op codes (paper Section 3.1: inserted/updated items or delete
+# markers)
+LOG_INSERT, LOG_UPDATE, LOG_DELETE = 0, 1, 2
+
+_LOCK_BIT = np.int64(1) << np.int64(63)
+_SEQ_SHIFT = np.int64(32)
+_SEQ_MASK = (np.int64(1) << np.int64(31)) - np.int64(1)
+
+
+class NodeHeap:
+    """Slab of node buffers with a free list."""
+
+    def __init__(self, cfg: HoneycombConfig, capacity: int = 1024):
+        self.cfg = cfg
+        self.capacity = 0
+        self._free: list[int] = []
+        self._alloc_arrays(capacity)
+
+    # -- storage -------------------------------------------------------------
+    def _alloc_arrays(self, capacity: int):
+        c = self.cfg
+        old = self.capacity
+
+        def grow(name, shape, dtype, fill=0):
+            new = np.full((capacity, *shape), fill, dtype=dtype)
+            if old:
+                new[:old] = getattr(self, name)
+            setattr(self, name, new)
+
+        grow("ntype", (), np.int32)
+        grow("nitems", (), np.int32)
+        grow("version", (), np.int64)
+        grow("oldptr", (), np.int32, NULL)       # previous-version phys slot
+        grow("left_child", (), np.int32, NULL)   # interior: leftmost child LID
+        grow("lsib", (), np.int32, NULL)         # leaf: sibling LIDs
+        grow("rsib", (), np.int32, NULL)
+        grow("lockword", (), np.int64)
+        grow("skeys", (c.node_cap, c.key_words), np.uint32)
+        grow("skeylen", (c.node_cap,), np.int32)
+        # leaves: value lanes; interior: child LID in lane 0
+        grow("svals", (c.node_cap, c.val_words), np.uint32)
+        grow("svallen", (c.node_cap,), np.int32)  # byte length / overflow tag
+        grow("n_shortcuts", (), np.int32)
+        grow("sc_keys", (c.n_shortcuts, c.key_words), np.uint32)
+        grow("sc_keylen", (c.n_shortcuts,), np.int32)
+        grow("sc_pos", (c.n_shortcuts,), np.int32)
+        grow("nlog", (), np.int32)
+        grow("log_keys", (c.log_cap, c.key_words), np.uint32)
+        grow("log_keylen", (c.log_cap,), np.int32)
+        grow("log_vals", (c.log_cap, c.val_words), np.uint32)
+        grow("log_vallen", (c.log_cap,), np.int32)
+        grow("log_op", (c.log_cap,), np.int8)
+        grow("log_backptr", (c.log_cap,), np.int32)
+        grow("log_hint", (c.log_cap,), np.uint8)
+        grow("log_vdelta", (c.log_cap,), np.int64)
+
+        self._free.extend(range(capacity - 1, old - 1, -1))
+        self.capacity = capacity
+
+    ARRAY_FIELDS = (
+        "ntype nitems version oldptr left_child lsib rsib skeys skeylen "
+        "svals svallen n_shortcuts sc_keys sc_keylen sc_pos nlog log_keys "
+        "log_keylen log_vals log_vallen log_op log_backptr log_hint "
+        "log_vdelta").split()
+
+    # -- alloc / free ----------------------------------------------------------
+    def alloc(self) -> int:
+        if not self._free:
+            self._alloc_arrays(self.capacity * 2)
+        return self._free.pop()
+
+    def free(self, slot: int):
+        self._wipe(slot)
+        self._free.append(slot)
+
+    def _wipe(self, s: int):
+        self.ntype[s] = 0
+        self.nitems[s] = 0
+        self.version[s] = 0
+        self.oldptr[s] = NULL
+        self.left_child[s] = NULL
+        self.lsib[s] = NULL
+        self.rsib[s] = NULL
+        self.lockword[s] = 0
+        self.n_shortcuts[s] = 0
+        self.nlog[s] = 0
+        self.skeylen[s] = 0
+        self.svallen[s] = 0
+
+    @property
+    def live_slots(self) -> int:
+        return self.capacity - len(self._free)
+
+    # -- lock word (Section 3.4) ----------------------------------------------
+    def seqno(self, s: int) -> int:
+        return int((self.lockword[s] >> _SEQ_SHIFT) & _SEQ_MASK)
+
+    def is_locked(self, s: int) -> bool:
+        return bool(self.lockword[s] & _LOCK_BIT)
+
+    def try_lock(self, s: int, expected_seqno: int) -> bool:
+        """CAS(lock=0, seqno=expected) -> lock=1.  Single host process, so a
+        plain check-and-set is an atomic CAS; the protocol (restart on seqno
+        mismatch) is what the tests exercise."""
+        if self.is_locked(s) or self.seqno(s) != expected_seqno:
+            return False
+        self.lockword[s] |= _LOCK_BIT
+        return True
+
+    def unlock_bump(self, s: int):
+        """Paper: size/seqno/lock packed in one word so the update is a single
+        store — here: clear lock, increment seqno."""
+        seq = (self.seqno(s) + 1) & int(_SEQ_MASK)
+        self.lockword[s] = (np.int64(seq) << _SEQ_SHIFT)
+
+    def unlock(self, s: int):
+        self.lockword[s] &= ~_LOCK_BIT
+
+
+class OverflowHeap:
+    """Out-of-node value storage (paper: values > 469 B live outside the
+    node).  Values are immutable once written; slots are recycled via GC."""
+
+    def __init__(self, cfg: HoneycombConfig, capacity: int = 256):
+        self.cfg = cfg
+        self.vals = np.zeros((capacity, cfg.overflow_words), np.uint32)
+        self.lens = np.zeros((capacity,), np.int32)
+        self._free = list(range(capacity - 1, -1, -1))
+
+    def alloc(self, data: bytes) -> int:
+        if not self._free:
+            cap = len(self.lens)
+            self.vals = np.concatenate([self.vals, np.zeros_like(self.vals)])
+            self.lens = np.concatenate([self.lens, np.zeros_like(self.lens)])
+            self._free.extend(range(2 * cap - 1, cap - 1, -1))
+        slot = self._free.pop()
+        buf = data + b"\x00" * (-len(data) % 4)
+        lanes = np.frombuffer(buf, dtype=">u4").astype(np.uint32)
+        self.vals[slot, :] = 0
+        self.vals[slot, : len(lanes)] = lanes
+        self.lens[slot] = len(data)
+        return slot
+
+    def read(self, slot: int) -> bytes:
+        n = int(self.lens[slot])
+        return self.vals[slot].astype(">u4").tobytes()[:n]
+
+    def free(self, slot: int):
+        self.lens[slot] = 0
+        self._free.append(slot)

@@ -1,0 +1,92 @@
+"""Key packing and comparison.
+
+The paper's KSU compares variable-size keys in 16-byte fragments through a
+barrel-shifter-fed pipeline (Section 4.2).  The TPU-native equivalent packs
+keys big-endian into uint32 lanes so that lexicographic *byte* order equals
+lexicographic *lane* order (unsigned), with key length as the tie break for
+prefix relationships.  A comparison is then a vectorized lane compare plus a
+first-difference select — no byte loops, VPU friendly.
+
+Host-side helpers use numpy; `jax_key_*` are the jit-compatible twins used by
+the batched read path and the Pallas kernel reference oracles.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def pack_key(key: bytes, key_words: int) -> np.ndarray:
+    """Pack bytes big-endian into uint32 lanes, zero padded."""
+    if len(key) > key_words * 4:
+        raise ValueError(f"key of {len(key)} bytes exceeds {key_words * 4}")
+    buf = key + b"\x00" * (key_words * 4 - len(key))
+    return np.frombuffer(buf, dtype=">u4").astype(np.uint32)
+
+
+def unpack_key(lanes: np.ndarray, length: int) -> bytes:
+    buf = np.asarray(lanes, dtype=np.uint32).astype(">u4").tobytes()
+    return buf[:length]
+
+
+def pack_keys(keys: list[bytes], key_words: int) -> tuple[np.ndarray, np.ndarray]:
+    """Pack a batch of keys -> (lanes [B, KW] uint32, lengths [B] int32)."""
+    lanes = np.stack([pack_key(k, key_words) for k in keys]) if keys else \
+        np.zeros((0, key_words), np.uint32)
+    lens = np.array([len(k) for k in keys], np.int32)
+    return lanes, lens
+
+
+# --- host comparisons (numpy scalars) ---------------------------------------
+
+def key_cmp(a: np.ndarray, alen: int, b: np.ndarray, blen: int) -> int:
+    """memcmp semantics over packed lanes: -1 / 0 / +1."""
+    a = np.asarray(a, np.uint32)
+    b = np.asarray(b, np.uint32)
+    neq = a != b
+    if neq.any():
+        i = int(np.argmax(neq))
+        return -1 if a[i] < b[i] else 1
+    # identical padded lanes: shorter key is a strict prefix => smaller
+    return (alen > blen) - (alen < blen)
+
+
+def key_less(a, alen, b, blen) -> bool:
+    return key_cmp(a, alen, b, blen) < 0
+
+
+def key_leq(a, alen, b, blen) -> bool:
+    return key_cmp(a, alen, b, blen) <= 0
+
+
+# --- jax comparisons (broadcastable) -----------------------------------------
+
+def jax_key_cmp(a, alen, b, blen):
+    """Vectorized memcmp: sign of comparison, broadcasting over leading dims.
+
+    a: [..., KW] uint32, alen: [...] int32 (same for b).  Returns [...] int32
+    in {-1, 0, 1}.
+    """
+    a = a.astype(jnp.uint32)
+    b = b.astype(jnp.uint32)
+    neq = a != b
+    any_neq = jnp.any(neq, axis=-1)
+    first = jnp.argmax(neq, axis=-1)  # first differing lane (0 if none)
+    av = jnp.take_along_axis(a, first[..., None], axis=-1)[..., 0]
+    bv = jnp.take_along_axis(b, first[..., None], axis=-1)[..., 0]
+    lane_sign = jnp.where(av < bv, -1, 1).astype(jnp.int32)
+    len_sign = jnp.sign(alen - blen).astype(jnp.int32)
+    return jnp.where(any_neq, lane_sign, len_sign)
+
+
+def jax_key_less(a, alen, b, blen):
+    return jax_key_cmp(a, alen, b, blen) < 0
+
+
+def jax_key_leq(a, alen, b, blen):
+    return jax_key_cmp(a, alen, b, blen) <= 0
+
+
+def int_key(x: int, width: int = 8) -> bytes:
+    """Fixed-width big-endian integer key (sorts numerically)."""
+    return int(x).to_bytes(width, "big")

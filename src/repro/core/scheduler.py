@@ -1,0 +1,80 @@
+"""Request scheduling: out-of-order batch composition (paper Section 4.1).
+
+The FPGA avoids head-of-line blocking by letting requests complete out of
+order.  In SPMD execution the whole batch advances in lock step, so the
+equivalent straggler mitigation is *batch composition*: requests with similar
+expected work (scan width, key size) are bucketed together so a vectorized
+step is not held hostage by one expensive lane, and responses are re-ordered
+back to arrival order on completion — out-of-order execution with in-order
+delivery, exactly the accelerator's contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Any, Callable, Iterable, Sequence
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    kind: str                  # "get" | "scan"
+    key: bytes = b""
+    hi: bytes = b""
+    expected_items: int = 1
+
+
+class OutOfOrderScheduler:
+    """Buckets requests by cost class, dispatches dense batches, reassembles
+    responses in arrival order."""
+
+    def __init__(self, batch_size: int = 256,
+                 cost_classes: Sequence[int] = (1, 4, 16, 64)):
+        self.batch_size = batch_size
+        self.cost_classes = tuple(sorted(cost_classes))
+        self._buckets: dict[tuple[str, int], list[Request]] = defaultdict(list)
+        self._next_rid = 0
+        self.dispatched_batches = 0
+        self.dispatched_requests = 0
+
+    def _cost_class(self, r: Request) -> int:
+        for c in self.cost_classes:
+            if r.expected_items <= c:
+                return c
+        return self.cost_classes[-1]
+
+    def submit(self, kind: str, key: bytes, hi: bytes = b"",
+               expected_items: int = 1) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        r = Request(rid, kind, key, hi, expected_items)
+        self._buckets[(kind, self._cost_class(r))].append(r)
+        return rid
+
+    def ready_batches(self, flush: bool = False
+                      ) -> Iterable[tuple[str, list[Request]]]:
+        """Full batches (or all remaining when flushing), densest first."""
+        for (kind, _), reqs in sorted(self._buckets.items(),
+                                      key=lambda kv: -len(kv[1])):
+            while len(reqs) >= self.batch_size or (flush and reqs):
+                batch = reqs[: self.batch_size]
+                del reqs[: self.batch_size]
+                yield kind, batch
+
+    def run(self, store, flush: bool = True) -> dict[int, Any]:
+        """Drive all pending requests through the store's batched paths and
+        return {rid: response} with in-order semantics per request id."""
+        out: dict[int, Any] = {}
+        for (kind, _), reqs in list(self._buckets.items()):
+            while reqs and (flush or len(reqs) >= self.batch_size):
+                batch = reqs[: self.batch_size]
+                del reqs[: self.batch_size]
+                self.dispatched_batches += 1
+                self.dispatched_requests += len(batch)
+                if kind == "get":
+                    res = store.get_batch([r.key for r in batch])
+                else:
+                    res = store.scan_batch([(r.key, r.hi) for r in batch])
+                for r, v in zip(batch, res):
+                    out[r.rid] = v
+        return out

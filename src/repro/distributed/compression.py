@@ -1,0 +1,81 @@
+"""Gradient compression for the cross-pod (DCN) hop, with error feedback.
+
+At 2+ pods, in-pod reduction rides 50 GB/s ICI while the pod axis crosses
+the datacenter network — often <10% of ICI bandwidth.  Compressing only the
+pod-axis all-reduce cuts that hop's bytes 4x (int8) to ~50x (top-k) while
+error feedback keeps the optimizer unbiased in the long run.
+
+``ef_int8`` / ``ef_topk`` are pure functions usable inside jit; the
+``GradCompressor`` carries the error-feedback residual as explicit state
+(a params-shaped pytree) so the train step stays functional.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_quantize(x: jax.Array):
+    """Symmetric per-tensor int8: (q, scale)."""
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: jax.Array, scale: jax.Array):
+    return q.astype(jnp.float32) * scale
+
+
+def topk_sparsify(x: jax.Array, frac: float):
+    """Keep the largest-|x| fraction; returns (sparse x, kept mask)."""
+    flat = x.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(x) >= thresh
+    return jnp.where(mask, x, 0.0), mask
+
+
+class CompressorState(NamedTuple):
+    residual: object     # params-shaped pytree of error-feedback residuals
+
+
+class GradCompressor:
+    """Error-feedback compressor: g' = C(g + r); r <- (g + r) - g'."""
+
+    def __init__(self, mode: str = "int8", topk_frac: float = 0.02):
+        assert mode in ("int8", "topk", "none")
+        self.mode = mode
+        self.topk_frac = topk_frac
+
+    def init(self, params) -> CompressorState:
+        return CompressorState(residual=jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def __call__(self, grads, state: CompressorState):
+        if self.mode == "none":
+            return grads, state
+
+        def comp(g, r):
+            x = g.astype(jnp.float32) + r
+            if self.mode == "int8":
+                q, s = int8_quantize(x)
+                out = int8_dequantize(q, s)
+            else:
+                out, _ = topk_sparsify(x, self.topk_frac)
+            return out, x - out
+
+        flat = jax.tree.map(comp, grads, state.residual)
+        outs = jax.tree.map(lambda t: t[0], flat,
+                            is_leaf=lambda t: isinstance(t, tuple))
+        res = jax.tree.map(lambda t: t[1], flat,
+                           is_leaf=lambda t: isinstance(t, tuple))
+        return outs, CompressorState(residual=res)
+
+    def wire_bytes_per_value(self) -> float:
+        """Bytes on the DCN per gradient value (roofline accounting)."""
+        return {"int8": 1.0,
+                "topk": 8.0 * self.topk_frac,   # value+index pairs
+                "none": 4.0}[self.mode]

@@ -1,0 +1,134 @@
+"""Sharding rules: logical axes -> production mesh axes.
+
+Mesh axes (launch/mesh.py): ``data`` (DP/FSDP), ``model`` (TP/EP), and
+``pod`` (cross-pod DP) in the multi-pod mesh.
+
+Baseline layout (the dry-run default):
+  * weights: 2D-sharded — "embed" on data (FSDP-style; GSPMD inserts the
+    all-gathers), "heads"/"kv"/"mlp"/"vocab"/"expert-inner" on model (TP).
+  * activations: batch on (pod, data), heads on model.
+  * MoE experts: inner dims sharded (2D dense baseline); expert-parallel
+    variants (experts on model) are hillclimb options where E % model == 0.
+  * decode KV pools: page dim on (pod, data); kv_heads on model when
+    divisible, else head_dim on model (GQA kv < 16 replicates heads the
+    same way Megatron does).
+  * mamba states: heads on model, batch on data when divisible.
+
+Every mapping is divisibility-checked against the actual dims; indivisible
+axes fall back to None (replicated) so every (arch x shape x mesh) cell
+lowers — imbalances then show up in the roofline table rather than as
+compile failures.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ArchConfig, ShapeConfig
+from repro.models import schema as sc
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """Tunable knobs — the §Perf hillclimb flips these."""
+    expert_parallel: bool = False   # experts on model axis (needs E % model)
+    fsdp_embed: bool = True         # "embed" on data axis
+    seq_parallel_pages: bool = True  # KV pages on data axis
+    decode_impl: str = "gather"     # "gather" (baseline) | "local" (§Perf)
+
+
+def _div(n: int, size: int) -> bool:
+    return n > 0 and n % size == 0
+
+
+def make_rules(cfg: ArchConfig, mesh: Mesh,
+               shape: ShapeConfig | None = None,
+               policy: ShardingPolicy = ShardingPolicy()) -> dict:
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model = axes.get("model", 1)
+    data = axes.get("data", 1)
+    has_pod = "pod" in axes
+    dp = ("pod", "data") if has_pod else ("data",)
+    dp_size = axes.get("pod", 1) * data
+
+    batch = shape.global_batch if shape else 0
+    rules: dict[str, object] = {
+        "layers": None,
+        "vocab": "model" if _div(cfg.vocab, model) else None,
+        "embed": ("data" if policy.fsdp_embed and _div(cfg.d_model, data)
+                  else None),
+        "heads": ("model"
+                  if _div(cfg.n_heads * cfg.head_dim, model) else None),
+        "kv": ("model"
+               if _div(cfg.n_kv_heads * cfg.head_dim, model) else None),
+        "mlp": "model" if _div(max(cfg.d_ff, cfg.d_inner), model) else None,
+        "expert": ("model" if policy.expert_parallel
+                   and _div(cfg.n_experts, model) else None),
+        # the MoE inner dim: TP normally; unsharded under EP (axis is taken)
+        "moe_mlp": (None if (policy.expert_parallel
+                             and _div(cfg.n_experts, model))
+                    else ("model" if _div(cfg.d_ff, model) else None)),
+        # activations / caches
+        "batch": dp if _div(batch, dp_size) else (
+            "data" if _div(batch, data) else None),
+        "kv_pages": dp if policy.seq_parallel_pages else None,
+        "kv_heads": "model" if _div(cfg.n_kv_heads, model) else None,
+        "head_dim": (None if _div(cfg.n_kv_heads, model)
+                     else ("model" if _div(cfg.head_dim, model) else None)),
+        # activation constraint axes (with_sharding_constraint targets)
+        "seq": None,
+        # "heads_act" is used by attention ([B,S,H*hd]) and by mamba
+        # ([B,S,H_ssm,P]); only shard when every user's dim divides
+        "heads_act": ("model"
+                      if ((not cfg.n_heads
+                           or _div(cfg.n_heads * cfg.head_dim, model))
+                          and (not cfg.ssm_state
+                               or _div(cfg.n_ssm_heads, model))
+                          and (cfg.n_heads or cfg.ssm_state))
+                      else None),
+        "kv_act": ("model"
+                   if _div(cfg.n_kv_heads * cfg.head_dim, model) else None),
+        "mlp_act": ("model"
+                    if _div(max(cfg.d_ff, cfg.d_inner), model) else None),
+        "vocab_act": "model" if _div(cfg.vocab, model) else None,
+        "expert_act": ("model" if policy.expert_parallel
+                       and _div(cfg.n_experts, model) else None),
+    }
+    return rules
+
+
+def make_shard_fn(mesh: Mesh, rules: dict):
+    """Activation-annotation callable threaded through the models."""
+    def shard(x, logical_axes):
+        spec = P(*[rules.get(a) if a is not None else None
+                   for a in logical_axes])
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+    return shard
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh, rules: dict):
+    from repro.models import transformer as tf
+    tree = tf.schema(cfg)
+    return sc.shardings(tree, rules, mesh)
+
+
+def named(mesh: Mesh, *axes) -> NamedSharding:
+    return NamedSharding(mesh, P(*axes))
+
+
+def batch_shardings(cfg: ArchConfig, mesh: Mesh, rules: dict,
+                    batch_tree) -> dict:
+    """Shard every batch input on its leading (batch) dimension."""
+    b = rules.get("batch")
+    return jax.tree.map(
+        lambda x: NamedSharding(mesh, P(b, *([None] * (len(x.shape) - 1)))),
+        batch_tree)
+
+
+def constrain(x, mesh: Mesh, rules: dict, logical_axes: tuple):
+    """with_sharding_constraint via logical names (activation annotations)."""
+    spec = P(*[rules.get(a) if a else None for a in logical_axes])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

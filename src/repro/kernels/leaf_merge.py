@@ -1,0 +1,125 @@
+"""RSU: leaf-node scan unit as a Pallas TPU kernel (paper Section 4.3).
+
+Computes the merged emission order of a leaf's sorted + log blocks without
+key comparisons:
+
+  1. order-hint shift-register sort of the log block (Figs. 7-8): one vector
+     step per log entry, exactly the hardware's one-cycle-per-item insertion
+     into a shift register, evaluated for a whole request block at once;
+  2. merged ranks: log entries slot in right before the sorted item named by
+     their back pointer, hint order breaking ties (Section 3.1);
+  3. rank -> permutation via pairwise counting (out_pos[i] = #{j: rank[j] <
+     rank[i]}), a [T, T] triangular compare — the TPU-native replacement for
+     the FPGA's indirection shift register.
+
+The kernel returns the permutation (source index per output position) and
+its validity mask; value movement happens outside (XLA gathers — the MSI
+adapters' job in the paper's architecture).
+
+VMEM per grid step (B_BLK=128, N=64, L=16, T=80): ranks 128*80*4 = 40 KiB,
+pairwise tile 128*80*80 bool ~ 800 KiB — within budget; B_BLK is the knob.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 128
+_I32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _shift_register_sort(hints, nlog, L):
+    """positions[b, j] = final slot of log entry j in ascending key order."""
+    def insert(j, pos):
+        placed = jax.lax.broadcasted_iota(jnp.int32, pos.shape, 1) < j
+        active = placed & (j < nlog)[:, None]
+        shift = active & (pos >= hints[:, j][:, None])
+        pos = pos + shift.astype(pos.dtype)
+        return pos.at[:, j].set(jnp.where(j < nlog, hints[:, j], pos[:, j]))
+    return jax.lax.fori_loop(0, L, insert,
+                             jnp.zeros(hints.shape, jnp.int32))
+
+
+def _leaf_merge_kernel(nitems_ref, nlog_ref, backptr_ref, hint_ref,
+                       perm_ref, valid_ref, *, N: int, L: int):
+    nitems = nitems_ref[...]       # [B]
+    nlog = nlog_ref[...]           # [B]
+    backptr = backptr_ref[...]     # [B, L]
+    hints = hint_ref[...]          # [B, L]
+    B = nitems.shape[0]
+    T = N + L
+
+    logpos = _shift_register_sort(hints, nlog, L)          # [B, L]
+    rank_log = backptr * (L + 1) + logpos                  # [B, L]
+    iota_n = jax.lax.broadcasted_iota(jnp.int32, (B, N), 1)
+    rank_sorted = iota_n * (L + 1) + L
+    svalid = iota_n < nitems[:, None]
+    lvalid = jax.lax.broadcasted_iota(jnp.int32, (B, L), 1) < nlog[:, None]
+    rank = jnp.concatenate([
+        jnp.where(svalid, rank_sorted, _I32_MAX),
+        jnp.where(lvalid, rank_log, _I32_MAX)], axis=1)    # [B, T]
+
+    # permutation via pairwise counting: unique ranks for valid slots;
+    # invalid slots share I32_MAX and are tie-broken by slot index
+    iota_t = jax.lax.broadcasted_iota(jnp.int32, (B, T), 1)
+    lt = (rank[:, :, None] > rank[:, None, :]) | (
+        (rank[:, :, None] == rank[:, None, :])
+        & (iota_t[:, :, None] > iota_t[:, None, :]))
+    out_pos = lt.sum(axis=2).astype(jnp.int32)             # [B, T]
+
+    # invert: perm[b, p] = source index emitted at position p
+    onehot = (out_pos[:, :, None]
+              == jax.lax.broadcasted_iota(jnp.int32, (B, T, T), 2))
+    perm = (onehot * iota_t[:, :, None]).sum(axis=1)
+    perm_ref[...] = perm.astype(jnp.int32)
+    valid_ref[...] = (jnp.concatenate([svalid, lvalid], axis=1)
+                      .astype(jnp.int32))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("node_cap", "log_cap", "block_b",
+                                    "interpret"))
+def leaf_merge(nitems, nlog, backptr, hints, *, node_cap: int, log_cap: int,
+               block_b: int = DEFAULT_BLOCK_B, interpret: bool = False):
+    """Merged emission permutation for a batch of leaves.
+
+    nitems, nlog: [B] int32; backptr, hints: [B, L] int32.
+    Returns (perm [B, T] int32, valid [B, T] int32) where T = N + L and
+    perm[b, p] is the concatenated-slot index (sorted block then log block)
+    emitted at merged position p; positions of invalid slots point at the
+    padding tail.
+    """
+    B = nitems.shape[0]
+    N, L = node_cap, log_cap
+    if B % block_b != 0:
+        pad = -B % block_b
+        nitems = jnp.pad(nitems, (0, pad))
+        nlog = jnp.pad(nlog, (0, pad))
+        backptr = jnp.pad(backptr, ((0, pad), (0, 0)))
+        hints = jnp.pad(hints, ((0, pad), (0, 0)))
+    Bp = nitems.shape[0]
+    T = N + L
+    kernel = functools.partial(_leaf_merge_kernel, N=N, L=L)
+    perm, valid = pl.pallas_call(
+        kernel,
+        grid=(Bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b, L), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, L), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, T), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, T), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, T), jnp.int32),
+            jax.ShapeDtypeStruct((Bp, T), jnp.int32),
+        ],
+        interpret=interpret,
+    )(nitems, nlog, backptr, hints)
+    return perm[:B], valid[:B]

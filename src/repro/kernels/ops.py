@@ -1,0 +1,54 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+``backend`` selects the implementation:
+  "ref"       pure-jnp oracle — what XLA:CPU lowers (dry-run / CI default)
+  "interpret" Pallas kernel body executed in Python on CPU (correctness)
+  "pallas"    compiled Pallas kernel — real TPUs
+
+The default follows the runtime: TPU -> pallas, else ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import key_search as _ks
+from . import leaf_merge as _lm
+from . import paged_attention as _pa
+from . import ref as _ref
+
+
+def default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def key_search(q, qlen, keys, klens, valid, backend: str | None = None,
+               **kw):
+    backend = backend or default_backend()
+    if backend == "ref":
+        return _ref.key_search_ref(q, qlen, keys, klens, valid)
+    return _ks.key_search(q, qlen, keys, klens, valid,
+                          interpret=(backend == "interpret"), **kw)
+
+
+def leaf_merge(nitems, nlog, backptr, hints, *, node_cap, log_cap,
+               backend: str | None = None, **kw):
+    backend = backend or default_backend()
+    if backend == "ref":
+        return _ref.leaf_merge_ref(nitems, nlog, backptr, hints,
+                                   node_cap=node_cap, log_cap=log_cap)
+    return _lm.leaf_merge(nitems, nlog, backptr, hints, node_cap=node_cap,
+                          log_cap=log_cap,
+                          interpret=(backend == "interpret"), **kw)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, seq_lens,
+                    start_pos=None, backend: str | None = None, **kw):
+    backend = backend or default_backend()
+    if backend == "ref":
+        return _ref.paged_attention_ref(q, k_pages, v_pages, block_tables,
+                                        seq_lens, start_pos, **kw)
+    return _pa.paged_attention(q, k_pages, v_pages, block_tables, seq_lens,
+                               start_pos,
+                               interpret=(backend == "interpret"), **kw)

@@ -1,0 +1,136 @@
+"""Paged decode attention over Honeycomb-indexed KV pages (Pallas TPU).
+
+The serving integration point of the paper's technique (DESIGN.md Section 4):
+the KV cache is paged; the ordered store maps (sequence, block) -> physical
+page, decode gathers pages through that mapping.  This kernel consumes the
+page indices exactly as the FPGA consumes LID->physical translations: the
+block table is a *scalar-prefetch* operand, so the page gather is expressed
+in the BlockSpec index_map and the DMA engine streams pages HBM->VMEM while
+the MXU works on the previous page — the TPU equivalent of the paper's MSI
+adapters overlapping memory reads with compute.
+
+Grid: (batch, pages_per_seq); online-softmax accumulation in VMEM scratch
+across the page dimension (initialized at page 0, emitted at the last page).
+``start_pos`` masks positions below a per-sequence lower bound (sliding-
+window layers); ``softcap`` applies gemma2-style logit capping.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_attn_kernel(block_tables_ref, seq_lens_ref, start_pos_ref,
+                       q_ref, k_ref, v_ref, out_ref,
+                       m_ref, l_ref, acc_ref,
+                       *, page_size: int, n_pages: int, scale: float,
+                       softcap: float):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                       # [KVH, G, D]
+    k = k_ref[0]                       # [P, KVH, D]
+    v = v_ref[0]                       # [P, KVH, D]
+
+    seq_len = seq_lens_ref[b]
+    start = start_pos_ref[b]
+    pos = p * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (page_size,), 0)
+    mask = (pos < seq_len) & (pos >= start)
+
+    s = jnp.einsum("kgd,pkd->kgp", q.astype(jnp.float32),
+                   k.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(mask[None, None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]                # [KVH, G]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    probs = jnp.exp(s - m_new[..., None])
+    probs = jnp.where(mask[None, None, :], probs, 0.0)
+    l_new = l_prev * alpha + probs.sum(axis=-1)
+    acc = acc_ref[...] * alpha[..., None] + jnp.einsum(
+        "kgp,pkd->kgd", probs, v.astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc
+
+    @pl.when(p == n_pages - 1)
+    def _emit():
+        out_ref[0] = (acc_ref[...]
+                      / jnp.maximum(l_ref[...], 1e-30)[..., None]
+                      ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "softcap", "interpret"))
+def paged_attention(q, k_pages, v_pages, block_tables, seq_lens,
+                    start_pos=None, *, scale: float | None = None,
+                    softcap: float = 0.0, interpret: bool = False):
+    """Decode attention over paged KV.
+
+    q:            [B, H, D]            (one new token per sequence)
+    k_pages:      [N_PAGES, P, KVH, D]
+    v_pages:      [N_PAGES, P, KVH, D]
+    block_tables: [B, PAGES_PER_SEQ] int32 — physical page per logical block
+                  (produced by Honeycomb GETs on the page-table store)
+    seq_lens:     [B] int32 — visible tokens (exclusive upper bound)
+    start_pos:    [B] int32 — first visible position (sliding window)
+    returns       [B, H, D]
+    """
+    B, H, D = q.shape
+    _, P, KVH, _ = k_pages.shape
+    G = H // KVH
+    PPS = block_tables.shape[1]
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    if start_pos is None:
+        start_pos = jnp.zeros_like(seq_lens)
+    qg = q.reshape(B, KVH, G, D)
+
+    grid = (B, PPS)
+    out = pl.pallas_call(
+        functools.partial(_paged_attn_kernel, page_size=P, n_pages=PPS,
+                          scale=scale, softcap=softcap),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, KVH, G, D),
+                             lambda b, p, bt, sl, sp: (b, 0, 0, 0)),
+                pl.BlockSpec((1, P, KVH, D),
+                             lambda b, p, bt, sl, sp: (bt[b, p], 0, 0, 0)),
+                pl.BlockSpec((1, P, KVH, D),
+                             lambda b, p, bt, sl, sp: (bt[b, p], 0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, KVH, G, D),
+                                   lambda b, p, bt, sl, sp: (b, 0, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((KVH, G), jnp.float32),
+                pltpu.VMEM((KVH, G), jnp.float32),
+                pltpu.VMEM((KVH, G, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, D), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), seq_lens.astype(jnp.int32),
+      start_pos.astype(jnp.int32), qg, k_pages, v_pages)
+    return out.reshape(B, H, D)

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (the reference the shape/dtype
+sweeps assert against)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.keys import jax_key_cmp
+from repro.core.read_path import log_sort_positions
+
+
+def key_search_ref(q, qlen, keys, klens, valid):
+    """Floor search oracle: largest valid index with key <= query, else -1."""
+    c = jax_key_cmp(keys, klens, q[:, None, :], qlen[:, None])
+    leq = (c <= 0) & (valid != 0)
+    n = keys.shape[1]
+    return jnp.where(leq, jnp.arange(n)[None, :], -1).max(axis=1) \
+        .astype(jnp.int32)
+
+
+def leaf_merge_ref(nitems, nlog, backptr, hints, *, node_cap: int,
+                   log_cap: int):
+    """Merged-emission permutation oracle (rank sort via argsort)."""
+    B = nitems.shape[0]
+    N, L = node_cap, log_cap
+    T = N + L
+    logpos = log_sort_positions(hints.astype(jnp.int32), nlog, L)
+    rank_log = backptr * (L + 1) + logpos
+    rank_sorted = jnp.arange(N)[None, :] * (L + 1) + L
+    svalid = jnp.arange(N)[None, :] < nitems[:, None]
+    lvalid = jnp.arange(L)[None, :] < nlog[:, None]
+    imax = jnp.iinfo(jnp.int32).max
+    rank = jnp.concatenate([
+        jnp.where(svalid, rank_sorted, imax),
+        jnp.where(lvalid, rank_log, imax)], axis=1)
+    perm = jnp.argsort(rank, axis=1, stable=True).astype(jnp.int32)
+    valid = jnp.concatenate([svalid, lvalid], axis=1).astype(jnp.int32)
+    return perm, valid
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, seq_lens,
+                        start_pos=None, *, scale: float | None = None,
+                        softcap: float = 0.0):
+    """Gather-then-dense-attention oracle."""
+    B, H, D = q.shape
+    _, P, KVH, _ = k_pages.shape
+    G = H // KVH
+    PPS = block_tables.shape[1]
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    if start_pos is None:
+        start_pos = jnp.zeros_like(seq_lens)
+    k = k_pages[block_tables].reshape(B, PPS * P, KVH, D)
+    v = v_pages[block_tables].reshape(B, PPS * P, KVH, D)
+    qg = q.reshape(B, KVH, G, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32)) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    pos = jnp.arange(PPS * P)[None, :]
+    mask = (pos < seq_lens[:, None]) & (pos >= start_pos[:, None])
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)

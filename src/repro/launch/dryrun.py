@@ -1,0 +1,225 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on the
+production mesh with ShapeDtypeStruct inputs (no allocation), record memory
+analysis, cost analysis and the collective schedule, and derive the roofline
+terms.
+
+The two lines above MUST stay the very first statements: jax locks the
+device count at first initialization, and the 512 placeholder CPU devices
+exist only for this process (smoke tests and benchmarks see 1 device).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b \
+      --shape train_4k --mesh single
+  ... --policy ep --moe-impl ragged    # hillclimb variants
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCH_IDS, ALIASES, get_config
+from repro.distributed.sharding import ShardingPolicy
+from repro.launch import hlo_analysis as hla
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+from repro.models.config import LM_SHAPES, long_context_ok, shape_by_name
+
+DEFAULT_OUT = Path("experiments/dryrun.json")
+
+
+def _compile(cfg, shape, mesh, policy, moe_impl, unroll=False,
+             grad_accum=4):
+    built = build_step(cfg, shape, mesh, policy=policy, moe_impl=moe_impl,
+                       unroll=unroll, grad_accum=grad_accum)
+    with mesh:
+        lowered = jax.jit(
+            built.fn,
+            in_shardings=built.in_shardings,
+            out_shardings=built.out_shardings,
+            donate_argnums=built.donate_argnums,
+        ).lower(*built.abstract_args)
+        compiled = lowered.compile()
+        return (compiled.memory_analysis(), compiled.cost_analysis(),
+                compiled.as_text())
+
+
+def _reduced(cfg, t: int):
+    """cfg with t superblocks (and proportional encoder depth) — used to
+    extrapolate per-layer costs, since XLA's cost analysis visits a while
+    (scan) body once instead of multiplying by the trip count."""
+    plen = len(cfg.pattern)
+    enc = (cfg.n_enc_layers * t) // cfg.n_superblocks \
+        if cfg.n_enc_layers else 0
+    return dataclasses.replace(cfg, n_layers=plen * t, n_enc_layers=enc)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             policy: ShardingPolicy, moe_impl: str,
+             grad_accum: int = 4) -> dict:
+    cfg = get_config(arch)
+    shape = shape_by_name(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    # full-depth compile: the dry-run proof + memory analysis
+    mem, cost_full, hlo = _compile(cfg, shape, mesh, policy, moe_impl,
+                                   grad_accum=grad_accum)
+    # 1- and 2-superblock compiles with the layer scan UNROLLED (loop-free,
+    # so XLA's cost analysis is exact) -> linear extrapolation
+    # cost(n) = c1 + (n-1) * (c2 - c1)
+    # (grad_accum=1 in the probes: the accumulation scan is another while
+    # loop the analysis would visit once; step flops are accum-invariant)
+    nsb = cfg.n_superblocks
+    if nsb > 1:
+        _, c1, h1 = _compile(_reduced(cfg, 1), shape, mesh, policy, moe_impl,
+                             unroll=True, grad_accum=1)
+        _, c2, h2 = _compile(_reduced(cfg, 2), shape, mesh, policy, moe_impl,
+                             unroll=True, grad_accum=1)
+        cost = {k: c1.get(k, 0.0) + (nsb - 1) * (c2.get(k, 0.0)
+                                                 - c1.get(k, 0.0))
+                for k in ("flops", "bytes accessed", "transcendentals")}
+        b1 = hla.collective_bytes(h1)
+        b2 = hla.collective_bytes(h2)
+        coll = {
+            "bytes": {k: b1["bytes"][k] + (nsb - 1)
+                      * (b2["bytes"][k] - b1["bytes"][k])
+                      for k in b1["bytes"]},
+            "counts": hla.collective_bytes(hlo)["counts"],
+            "total_bytes": b1["total_bytes"] + (nsb - 1)
+            * (b2["total_bytes"] - b1["total_bytes"]),
+            "extrapolated": True,
+        }
+    else:
+        cost = cost_full
+        coll = hla.collective_bytes(hlo)
+    t1 = time.time()
+
+    mf = hla.model_flops_per_step(cfg, shape) / n_chips
+    rl = hla.roofline(cost, coll, mf)
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "compile_s": round(t1 - t0, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes": (mem.argument_size_in_bytes
+                           + mem.output_size_in_bytes
+                           + mem.temp_size_in_bytes
+                           - mem.alias_size_in_bytes),
+        },
+        "collectives": coll,
+        "roofline": rl.to_dict(),
+    }
+
+
+def cells(archs, shapes):
+    for a in archs:
+        cfg = get_config(a)
+        for s in shapes:
+            sh = shape_by_name(s)
+            if sh.name == "long_500k" and not long_context_ok(cfg):
+                yield a, s, "skip", ("full-attention family: long_500k "
+                                     "inapplicable (DESIGN.md Section 6)")
+                continue
+            yield a, s, "run", ""
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    ap.add_argument("--policy", default="base",
+                    choices=["base", "ep", "noseqpages", "localpages"])
+    ap.add_argument("--moe-impl", default="dense",
+                    choices=["dense", "ragged", "ep_ragged", "fsliced"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--accum", type=int, default=4,
+                    help="gradient-accumulation microbatches (train cells)")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    policy = {
+        "base": ShardingPolicy(),
+        "ep": ShardingPolicy(expert_parallel=True),
+        "noseqpages": ShardingPolicy(seq_parallel_pages=False),
+        "localpages": ShardingPolicy(decode_impl="local"),
+    }[args.policy]
+
+    out_path = Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    results = {}
+    if out_path.exists():
+        results = json.loads(out_path.read_text())
+
+    archs = [args.arch] if args.arch else list(ALIASES.keys())
+    shapes = [args.shape] if args.shape else [s.name for s in LM_SHAPES]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    n_ok = n_skip = n_fail = 0
+    for arch, shape, what, why in cells(archs, shapes):
+        for multi in meshes:
+            key = f"{arch}|{shape}|{'multi' if multi else 'single'}"
+            if args.policy != "base" or args.moe_impl != "dense":
+                key += f"|{args.policy}|{args.moe_impl}"
+            if args.tag:
+                key += f"|{args.tag}"
+            if key in results and results[key].get("status") == "ok" \
+                    and not args.force:
+                print(f"[cached] {key}")
+                n_ok += 1
+                continue
+            if what == "skip":
+                results[key] = {"arch": arch, "shape": shape,
+                                "status": "skip", "reason": why}
+                print(f"[skip]   {key}: {why}")
+                n_skip += 1
+            else:
+                print(f"[run]    {key} ...", flush=True)
+                try:
+                    r = run_cell(arch, shape, multi, policy, args.moe_impl,
+                                 grad_accum=args.accum)
+                    r["policy"] = args.policy
+                    r["moe_impl"] = args.moe_impl
+                    results[key] = r
+                    rl = r["roofline"]
+                    print(f"         ok in {r['compile_s']}s  "
+                          f"dominant={rl['dominant']} "
+                          f"compute={rl['compute_s']:.3e}s "
+                          f"memory={rl['memory_s']:.3e}s "
+                          f"coll={rl['collective_s']:.3e}s "
+                          f"useful={rl['useful_ratio']:.2f} "
+                          f"peakGB={r['memory']['peak_bytes']/2**30:.2f}",
+                          flush=True)
+                    n_ok += 1
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    results[key] = {"arch": arch, "shape": shape,
+                                    "status": "error",
+                                    "error": f"{type(e).__name__}: {e}",
+                                    "trace": traceback.format_exc()[-2000:]}
+                    print(f"         FAILED: {type(e).__name__}: "
+                          f"{str(e)[:300]}", flush=True)
+                    n_fail += 1
+            out_path.write_text(json.dumps(results, indent=1))
+    print(f"done: {n_ok} ok, {n_skip} skip, {n_fail} fail "
+          f"-> {out_path}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,225 @@
+"""Step builders + abstract input specs for every (arch x shape) cell.
+
+``build_step`` returns (fn, in_shardings, out_shardings, abstract_args,
+donate) ready for ``jax.jit(...).lower(*abstract_args)`` — the single entry
+point shared by the dry-run, the roofline harness and the real drivers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.paged_attention import paged_attention_local
+from repro.distributed.sharding import (ShardingPolicy, batch_shardings,
+                                        make_rules, make_shard_fn)
+from repro.models import moe as me
+from repro.models import schema as sc
+from repro.models import transformer as tf
+from repro.models.config import ArchConfig, ShapeConfig
+from repro.train import optimizer as opt
+
+
+@dataclasses.dataclass
+class BuiltStep:
+    fn: Any
+    abstract_args: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple
+
+
+def _ns(mesh, *axes):
+    return NamedSharding(mesh, P(*axes))
+
+
+# ------------------------------------------------------------- input specs
+def train_inputs(cfg: ArchConfig, shape: ShapeConfig):
+    """ShapeDtypeStructs for one global training batch."""
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    batch: dict[str, Any] = {"labels": sds((B, S), jnp.int32)}
+    if cfg.embeds_in:
+        batch["embeds"] = sds((B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = sds((B, S), jnp.int32)
+    if cfg.n_enc_layers:
+        batch["enc_embeds"] = sds((B, S // cfg.enc_seq_divisor, cfg.d_model),
+                                  jnp.bfloat16)
+    return batch
+
+
+def decode_cache_abstract(cfg: ArchConfig, shape: ShapeConfig):
+    B, S, P_ = shape.global_batch, shape.seq_len, shape.page_size
+    pps = S // P_
+    layer_tree = sc.abstract(
+        sc.stack(cfg.n_superblocks,
+                 tf.layer_cache_schema(cfg, B, pps, P_)))
+    sds = jax.ShapeDtypeStruct
+    return tf.DecodeCache(layers=layer_tree,
+                          block_tables=sds((B, pps), jnp.int32),
+                          seq_lens=sds((B,), jnp.int32))
+
+
+def decode_cache_shardings(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                           rules: dict):
+    B, S, P_ = shape.global_batch, shape.seq_len, shape.page_size
+    pps = S // P_
+    layer_specs = sc.shardings(
+        sc.stack(cfg.n_superblocks, tf.layer_cache_schema(cfg, B, pps, P_)),
+        rules, mesh)
+    b = rules.get("batch")
+    return tf.DecodeCache(layers=layer_specs,
+                          block_tables=_ns(mesh, b, None),
+                          seq_lens=_ns(mesh, b))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """All abstract model inputs for an (arch x shape) cell — the dry-run's
+    ShapeDtypeStruct stand-ins (no allocation)."""
+    if shape.kind == "train":
+        return {"batch": train_inputs(cfg, shape)}
+    if shape.kind == "prefill":
+        b = train_inputs(cfg, shape)
+        b.pop("labels")
+        return {"batch": b}
+    sds = jax.ShapeDtypeStruct
+    B = shape.global_batch
+    spec = {"tokens": sds((B, 1), jnp.int32),
+            "cache": decode_cache_abstract(cfg, shape)}
+    if cfg.n_enc_layers:
+        spec["enc_out"] = sds((B, shape.seq_len // cfg.enc_seq_divisor // 16,
+                               cfg.d_model), jnp.bfloat16)
+    return spec
+
+
+# -------------------------------------------------------------- step build
+def build_step(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+               policy: ShardingPolicy = ShardingPolicy(),
+               moe_impl: str = "dense",
+               opt_cfg: opt.AdamWConfig = opt.AdamWConfig(),
+               attn_backend: str | None = "ref",
+               unroll: bool = False,
+               grad_accum: int = 4) -> BuiltStep:
+    rules = make_rules(cfg, mesh, shape, policy)
+    shard = make_shard_fn(mesh, rules)
+    params_abs = sc.abstract(tf.schema(cfg))
+    params_sh = sc.shardings(tf.schema(cfg), rules, mesh)
+    dp_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    n_data = 1
+    for a in dp_axes:
+        n_data *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+
+    # §Perf variants: shard_map EP MoE / locality-preserving paged decode
+    if moe_impl == "ep_ragged":
+        assert rules["expert"] == "model", \
+            "ep_ragged needs --policy ep and E %% model == 0"
+        moe_impl = functools.partial(me.moe_ep_ragged, mesh=mesh,
+                                     dp_axes=dp_axes)
+    elif moe_impl == "fsliced":
+        moe_impl = functools.partial(me.moe_fsliced_ragged, mesh=mesh,
+                                     dp_axes=dp_axes)
+    attn_local = None
+    if policy.decode_impl == "local" and shape.kind == "decode" \
+            and shape.global_batch % n_data == 0:
+        attn_local = functools.partial(
+            paged_attention_local, mesh=mesh, batch_axes=dp_axes,
+            kv_head_axis=rules["kv_heads"], head_dim_axis=rules["head_dim"],
+            page_size=shape.page_size)
+
+    if shape.kind == "train":
+        batch_abs = train_inputs(cfg, shape)
+        batch_sh = batch_shardings(cfg, mesh, rules, batch_abs)
+        opt_abs = opt.abstract_state(params_abs)
+        opt_sh = opt.OptState(step=_ns(mesh), mu=params_sh, nu=params_sh)
+
+        accum = grad_accum if shape.global_batch % grad_accum == 0 else 1
+
+        def train_step(params, opt_state, batch):
+            # microbatched gradient accumulation: activation memory scales
+            # with B/accum while FSDP weight gathers amortize across the
+            # inner scan (compute/comm overlap at the schedule level)
+            micro = jax.tree.map(
+                lambda x: x.reshape(accum, x.shape[0] // accum,
+                                    *x.shape[1:]), batch)
+
+            def one(carry, mb):
+                gsum = carry
+                loss, grads = jax.value_and_grad(tf.lm_loss)(
+                    params, cfg, mb, moe_impl=moe_impl, shard=shard,
+                    unroll=unroll)
+                gsum = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+                return gsum, loss
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            gsum, losses = jax.lax.scan(one, zeros, micro)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            new_params, new_opt, gnorm = opt.update(
+                opt_cfg, grads, opt_state, params)
+            return new_params, new_opt, {"loss": losses.mean(),
+                                         "gnorm": gnorm}
+
+        scalars = {"loss": _ns(mesh), "gnorm": _ns(mesh)}
+        return BuiltStep(
+            fn=train_step,
+            abstract_args=(params_abs, opt_abs, batch_abs),
+            in_shardings=(params_sh, opt_sh, batch_sh),
+            out_shardings=(params_sh, opt_sh, scalars),
+            donate_argnums=(0, 1))
+
+    if shape.kind == "prefill":
+        batch_abs = input_specs(cfg, shape)["batch"]
+        batch_sh = batch_shardings(cfg, mesh, rules, batch_abs)
+        cache_sh = decode_cache_shardings(cfg, shape, mesh, rules)
+        b = rules.get("batch")
+        vshard = rules.get("vocab")
+
+        def prefill_step(params, batch):
+            enc_out = None
+            if cfg.n_enc_layers:
+                enc_out = tf.encode(params, cfg, batch["enc_embeds"],
+                                    shard=shard, unroll=unroll)
+            logits, cache = tf.prefill(
+                params, cfg, tokens=batch.get("tokens"),
+                embeds=batch.get("embeds"), enc_out=enc_out,
+                page_size=shape.page_size, moe_impl=moe_impl, shard=shard,
+                unroll=unroll)
+            return logits, cache
+
+        return BuiltStep(
+            fn=prefill_step,
+            abstract_args=(params_abs, batch_abs),
+            in_shardings=(params_sh, batch_sh),
+            out_shardings=(_ns(mesh, b, vshard), cache_sh),
+            donate_argnums=())
+
+    # ---- decode ----------------------------------------------------------
+    specs = input_specs(cfg, shape)
+    cache_sh = decode_cache_shardings(cfg, shape, mesh, rules)
+    b = rules.get("batch")
+    vshard = rules.get("vocab")
+    has_enc = cfg.n_enc_layers > 0
+
+    def decode_step(params, cache, tokens, enc_out=None):
+        return tf.decode_step(params, cfg, cache, tokens,
+                              page_size=shape.page_size, enc_out=enc_out,
+                              attn_backend=attn_backend, shard=shard,
+                              unroll=unroll, attn_local_impl=attn_local)
+
+    args = (params_abs, specs["cache"], specs["tokens"])
+    shards = (params_sh, cache_sh, _ns(mesh, b, None))
+    if has_enc:
+        args = args + (specs["enc_out"],)
+        shards = shards + (_ns(mesh, b, None, None),)
+    return BuiltStep(
+        fn=decode_step,
+        abstract_args=args,
+        in_shardings=shards,
+        out_shardings=(_ns(mesh, b, vshard), cache_sh),
+        donate_argnums=(1,))

@@ -1,0 +1,49 @@
+"""End-to-end training driver.
+
+Smoke scale (this container):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b --smoke \
+      --steps 50
+
+Production scale: the same builder the dry-run compiles, on the real mesh
+(remove --smoke on a TPU slice).  Checkpoint/restart and straggler handling
+live in repro.train.train_loop.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+from repro.configs import get_config, get_smoke_config
+from repro.train.train_loop import LoopConfig, build_smoke_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config, single device")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    loop = build_smoke_loop(
+        cfg, batch=args.batch, seq=args.seq, ckpt_dir=args.ckpt_dir,
+        loop_cfg=LoopConfig(total_steps=args.steps,
+                            ckpt_every=max(args.steps // 2, 1),
+                            log_every=max(args.steps // 10, 1)))
+    if args.resume and loop.restore_latest():
+        print(f"resumed from step {loop.step}")
+    summary = loop.run()
+    for m in loop.metrics_log:
+        print(json.dumps(m))
+    print("summary:", json.dumps(summary))
+    loop.pipeline.close()
+
+
+if __name__ == "__main__":
+    main()

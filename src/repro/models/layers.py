@@ -1,0 +1,231 @@
+"""Shared transformer layers: norms, RoPE, GQA attention (train/prefill and
+paged decode), gated MLP.
+
+Everything is a pure function of (params, inputs, cfg); parameter schemas
+live next to the forward functions so shapes/axes cannot drift.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .schema import ParamDef
+
+F32 = jnp.float32
+NEG_INF = -2.3819763e38
+
+
+# ----------------------------------------------------------------- norms
+def rmsnorm_schema(d: int):
+    return {"scale": ParamDef((d,), (None,), jnp.float32, "ones")}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * p["scale"]).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ rope
+def rope(x, positions, theta: float):
+    """x: [..., S, H, D]; positions: [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=F32) / half)
+    angles = positions[..., None].astype(F32) * freq       # [..., S, half]
+    angles = angles[..., None, :]                          # [..., S, 1, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half].astype(F32), x[..., half:].astype(F32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention
+def attention_schema(cfg: ArchConfig):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s = {
+        "wq": ParamDef((d, h * hd), ("embed", "heads")),
+        "wk": ParamDef((d, kv * hd), ("embed", "kv")),
+        "wv": ParamDef((d, kv * hd), ("embed", "kv")),
+        "wo": ParamDef((h * hd, d), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamDef((h * hd,), ("heads",), jnp.float32, "zeros")
+        s["bk"] = ParamDef((kv * hd,), ("kv",), jnp.float32, "zeros")
+        s["bv"] = ParamDef((kv * hd,), ("kv",), jnp.float32, "zeros")
+    return s
+
+
+def _noshard(x, axes):
+    return x
+
+
+def _qkv(p, x, cfg: ArchConfig, positions, shard=_noshard):
+    B, S, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = shard(q, ("batch", "seq", "heads_act"))
+    k = shard(k, ("batch", "seq", "kv_act"))
+    v = shard(v, ("batch", "seq", "kv_act"))
+    q = rope(q.reshape(B, S, h, hd), positions, cfg.rope_theta)
+    k = rope(k.reshape(B, S, kv, hd), positions, cfg.rope_theta)
+    return q, k, v.reshape(B, S, kv, hd)
+
+
+def _softcap(s, cap: float):
+    return jnp.tanh(s / cap) * cap if cap else s
+
+
+def attention(p, x, cfg: ArchConfig, *, local: bool, positions=None,
+              seq_lens=None, shard=_noshard, q_chunk: int = 4096):
+    """Causal self-attention for train/prefill.  ``local`` selects the
+    sliding-window mask (cfg.window).
+
+    KV heads are repeated to the query head count before the score einsum
+    (Megatron-style GQA TP: the head dim shards cleanly on the model axis;
+    each chip only materializes its own heads' repeats).  Sequences longer
+    than ``q_chunk`` process query blocks through a lax.scan so the live
+    score buffer is [B, H, q_chunk, S] instead of [B, H, S, S] — the knob
+    that makes 32k prefill feasible.
+    """
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    q, k, v = _qkv(p, x, cfg, positions, shard)
+    g, hd = cfg.q_per_kv, cfg.head_dim
+    kr = jnp.repeat(k, g, axis=2)            # [B, S, H, hd]
+    vr = jnp.repeat(v, g, axis=2)
+    kr = shard(kr, ("batch", "seq", "heads_act", None))
+    vr = shard(vr, ("batch", "seq", "heads_act", None))
+    scale = hd ** -0.5
+
+    def block(q_blk, pos_blk):
+        """q_blk: [B, Q, H, hd]; pos_blk: [B, Q] -> [B, Q, H, hd]."""
+        s = jnp.einsum("bqhd,bshd->bhqs", q_blk.astype(F32) * scale,
+                       kr.astype(F32))
+        s = _softcap(s, cfg.attn_softcap)
+        qp = pos_blk[:, None, :, None]
+        kp = positions[:, None, None, :]
+        mask = kp <= qp
+        if local and cfg.window:
+            mask &= kp > qp - cfg.window
+        if seq_lens is not None:
+            mask &= kp < seq_lens[:, None, None, None]
+        s = jnp.where(mask, s, NEG_INF)
+        probs = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqs,bshd->bqhd", probs.astype(vr.dtype), vr)
+
+    if S <= q_chunk:
+        o = block(q, positions)
+    else:
+        nq = S // q_chunk
+        qs = q.reshape(B, nq, q_chunk, cfg.n_heads, hd).swapaxes(0, 1)
+        ps = positions.reshape(B, nq, q_chunk).swapaxes(0, 1)
+        o = jax.lax.scan(
+            lambda _, inp: (None, block(*inp)), None, (qs, ps))[1]
+        o = o.swapaxes(0, 1).reshape(B, S, cfg.n_heads, hd)
+    o = shard(o.reshape(B, S, cfg.n_heads * hd),
+              ("batch", "seq", "heads_act"))
+    return jnp.einsum("bsh,hd->bsd", o, p["wo"]), (k, v)
+
+
+def decode_attention(p, x, cfg: ArchConfig, k_pages, v_pages, block_tables,
+                     seq_lens, *, local: bool, page_size: int,
+                     backend: str | None = None, shard=_noshard,
+                     local_impl=None):
+    """Single-token decode over a paged KV cache (scatter-then-attend).
+
+    x: [B, 1, d]; k_pages/v_pages: [NP, P, KVH, HD] (this layer's pool);
+    block_tables: [B, PPS] physical page ids (Honeycomb page-table lookups);
+    seq_lens: [B] tokens already in cache (the new token's position).
+
+    The new token's KV is scattered into its page slot first, then one paged
+    attention pass covers history + self.  Returns
+    (out [B, 1, d], (k_pages, v_pages)) with the updated pools.
+    """
+    from repro.kernels import ops as kops
+    B = x.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    positions = seq_lens[:, None]                    # [B, 1]
+    q, k, v = _qkv(p, x, cfg, positions, shard)
+    q = q[:, 0]                                      # [B, H, HD]
+    k_new, v_new = k[:, 0], v[:, 0]                  # [B, KVH, HD]
+
+    new_lens = seq_lens + 1
+    if local and cfg.window:
+        start = jnp.maximum(new_lens - cfg.window, 0)
+    else:
+        start = jnp.zeros_like(new_lens)
+
+    if local_impl is not None:
+        # §Perf path: shard_map-local pools (scatter happens inside)
+        o, k_pages, v_pages = local_impl(
+            q, k_pages, v_pages, block_tables, seq_lens, start,
+            k_new, v_new, scale=hd ** -0.5, softcap=cfg.attn_softcap)
+    else:
+        rows = jnp.arange(B)
+        page = block_tables[rows, seq_lens // page_size]
+        slot = seq_lens % page_size
+        k_pages = k_pages.at[page, slot].set(k_new.astype(k_pages.dtype))
+        v_pages = v_pages.at[page, slot].set(v_new.astype(v_pages.dtype))
+        o = kops.paged_attention(q, k_pages, v_pages, block_tables,
+                                 new_lens, start, backend=backend,
+                                 scale=hd ** -0.5,
+                                 softcap=cfg.attn_softcap)
+    o = o.reshape(B, 1, h * hd).astype(x.dtype)
+    return jnp.einsum("bsh,hd->bsd", o, p["wo"]), (k_pages, v_pages)
+
+
+# ------------------------------------------------------------------- mlp
+def mlp_schema(cfg: ArchConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": ParamDef((d, f), ("embed", "mlp")),
+        "w_up": ParamDef((d, f), ("embed", "mlp")),
+        "w_down": ParamDef((f, d), ("mlp", "embed")),
+    }
+
+
+def mlp(p, x, shard=_noshard):
+    g = shard(jnp.einsum("bsd,df->bsf", x, p["w_gate"]),
+              ("batch", "seq", "mlp_act"))
+    u = shard(jnp.einsum("bsd,df->bsf", x, p["w_up"]),
+              ("batch", "seq", "mlp_act"))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, p["w_down"])
+
+
+# ------------------------------------------------------- cross attention
+def cross_attention_schema(cfg: ArchConfig):
+    return attention_schema(cfg)
+
+
+def cross_attention(p, x, ctx, cfg: ArchConfig, ctx_lens=None,
+                    shard=_noshard):
+    """Encoder-decoder cross attention (seamless): queries from x, keys and
+    values from the encoder output ctx [B, Senc, d]."""
+    B, S, _ = x.shape
+    Senc = ctx.shape[1]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = shard(jnp.einsum("bsd,dh->bsh", x, p["wq"]),
+              ("batch", "seq", "heads_act")).reshape(B, S, h, hd)
+    k = jnp.einsum("bsd,dh->bsh", ctx, p["wk"]).reshape(B, Senc, kv, hd)
+    v = jnp.einsum("bsd,dh->bsh", ctx, p["wv"]).reshape(B, Senc, kv, hd)
+    g = cfg.q_per_kv
+    kr = shard(jnp.repeat(k, g, axis=2), ("batch", "seq", "heads_act", None))
+    vr = shard(jnp.repeat(v, g, axis=2), ("batch", "seq", "heads_act", None))
+    s = jnp.einsum("bqhd,bshd->bhqs", q.astype(F32) * hd ** -0.5,
+                   kr.astype(F32))
+    if ctx_lens is not None:
+        mask = jnp.arange(Senc)[None, :] < ctx_lens[:, None]
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqs,bshd->bqhd", probs.astype(vr.dtype), vr)
+    o = shard(o.reshape(B, S, h * hd), ("batch", "seq", "heads_act"))
+    return jnp.einsum("bsh,hd->bsd", o, p["wo"])

@@ -1,0 +1,191 @@
+"""Mamba2 (SSD — state-space duality) blocks, arXiv:2405.21060.
+
+Train/prefill uses the chunked SSD algorithm: the sequence is split into
+chunks; within a chunk the output is the quadratic "attention-like" form,
+across chunks a compact recurrent state [H, P, N] is passed (a lax.scan over
+chunks).  Decode is the pure recurrence — the state is the "KV page" that
+the Honeycomb-indexed serving cache stores per sequence.
+
+Jamba's mamba layers reuse this module with its own (state=16) geometry; the
+SSD formulation generalizes the S6 recurrence, noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .schema import ParamDef
+from .layers import rmsnorm, rmsnorm_schema
+
+F32 = jnp.float32
+
+
+class MambaState(NamedTuple):
+    ssm: jax.Array     # [B, H, P, N] recurrent state
+    conv: jax.Array    # [B, W-1, conv_dim] causal-conv tail
+
+
+def mamba_schema(cfg: ArchConfig):
+    d = cfg.d_model
+    din = cfg.d_inner
+    H = cfg.n_ssm_heads
+    N = cfg.ssm_state
+    G = 1  # B/C groups
+    conv_dim = din + 2 * G * N
+    # in_proj emits [z, x, B, C, dt]
+    d_proj = 2 * din + 2 * G * N + H
+    return {
+        "in_proj": ParamDef((d, d_proj), ("embed", "mlp")),
+        "conv_w": ParamDef((cfg.conv_width, conv_dim), (None, "mlp")),
+        "conv_b": ParamDef((conv_dim,), ("mlp",), jnp.float32, "zeros"),
+        "A_log": ParamDef((H,), (None,), jnp.float32, "zeros"),
+        "D": ParamDef((H,), (None,), jnp.float32, "ones"),
+        "dt_bias": ParamDef((H,), (None,), jnp.float32, "zeros"),
+        "out_norm": rmsnorm_schema(din)["scale"],
+        "out_proj": ParamDef((din, d), ("mlp", "embed")),
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt):
+    din, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * N], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(p, xbc, conv_tail=None):
+    """Depthwise causal conv, width W.  xbc: [B, S, C]."""
+    W = p["conv_w"].shape[0]
+    if conv_tail is None:
+        pad = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_tail.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)           # [B, S+W-1, C]
+    out = sum(xp[:, i: i + xbc.shape[1]] * p["conv_w"][i].astype(xbc.dtype)
+              for i in range(W))
+    out = out + p["conv_b"].astype(xbc.dtype)
+    new_tail = xp[:, xp.shape[1] - (W - 1):]
+    return jax.nn.silu(out), new_tail
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD scan (Mamba2 paper, Listing 1 adapted to JAX).
+
+    xh: [B,S,H,P]; dt: [B,S,H] (post-softplus); A: [H] (negative);
+    Bm/Cm: [B,S,N] (single group).  Returns y [B,S,H,P] and the final
+    state [B,H,P,N].
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    Q = chunk
+
+    dA = dt * A[None, None, :]                        # [B,S,H]
+    xdt = xh * dt[..., None]                          # [B,S,H,P]
+
+    r = lambda t: t.reshape(Bsz, nc, Q, *t.shape[2:])
+    dA_c, xdt_c = r(dA), r(xdt)
+    B_c, C_c = r(Bm), r(Cm)
+
+    cs = jnp.cumsum(dA_c, axis=2)                     # [B,nc,Q,H]
+    # intra-chunk ("diagonal block"): L[i,j] = exp(cs_i - cs_j) for i >= j.
+    # Mask BEFORE the exp: above the diagonal cs_i - cs_j >= 0 overflows and
+    # exp's cotangent would poison gradients through the where.
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]  # [B,nc,Q,Q,H]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    seg = jnp.where(causal[None, None, :, :, None], seg, -jnp.inf)
+    L = jnp.exp(seg)
+    G = jnp.einsum("bcqn,bckn->bcqk", C_c.astype(F32), B_c.astype(F32))
+    y_diag = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", G, L,
+                        xdt_c.astype(F32))
+
+    # chunk state contributions: decay from position to chunk end
+    decay_out = jnp.exp(cs[:, :, -1:, :] - cs)        # [B,nc,Q,H]
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", B_c.astype(F32),
+                        decay_out, xdt_c.astype(F32))  # [B,nc,H,P,N]
+    chunk_decay = jnp.exp(cs[:, :, -1, :])            # [B,nc,H]
+
+    # inter-chunk recurrence (scan over chunks)
+    def step(h, inp):
+        st, dec = inp                                  # [B,H,P,N], [B,H]
+        h_new = h * dec[:, :, None, None] + st
+        return h_new, h                                # emit state BEFORE chunk
+
+    h0 = jnp.zeros((Bsz, H, P, N), F32)
+    hT, h_prev = jax.lax.scan(
+        step, h0, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    h_prev = h_prev.swapaxes(0, 1)                    # [B,nc,H,P,N]
+
+    # inter-chunk ("off-diagonal"): contribution of the carried-in state
+    decay_in = jnp.exp(cs)                            # [B,nc,Q,H]
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", C_c.astype(F32),
+                       decay_in, h_prev)
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y, hT
+
+
+def _noshard(x, axes):
+    return x
+
+
+def mamba_block(p, x, cfg: ArchConfig, chunk: int = 64,
+                return_state: bool = False, shard=_noshard):
+    """Full Mamba2 block for train/prefill.  x: [B,S,d] -> [B,S,d].
+
+    With ``return_state`` also returns the MambaState after the last token
+    (the prefill -> decode handoff; the state is the serving cache's "page"
+    for SSM layers)."""
+    B, S, _ = x.shape
+    H, P, N = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc_conv, conv_tail = _causal_conv(p, xbc)
+    xin, Bm, Cm = jnp.split(xbc_conv, [cfg.d_inner, cfg.d_inner + N],
+                            axis=-1)
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])
+    dt = shard(dt, ("batch", "seq", "heads_act"))
+    A = -jnp.exp(p["A_log"])
+    xh = shard(xin.reshape(B, S, H, P), ("batch", "seq", "heads_act", None))
+    y, hT = _ssd_chunked(xh, dt, A, Bm, Cm, chunk=min(chunk, S))
+    y = y + xh.astype(F32) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, cfg.d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(shard(z, ("batch", "seq", "mlp_act")))
+    y = rmsnorm({"scale": p["out_norm"]}, y)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    if return_state:
+        return out, MambaState(ssm=hT, conv=conv_tail)
+    return out
+
+
+def mamba_decode(p, x, state: MambaState, cfg: ArchConfig):
+    """Single-token recurrence.  x: [B,1,d] -> ([B,1,d], new state)."""
+    B = x.shape[0]
+    H, P, N = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc, conv_tail = _causal_conv(p, xbc, state.conv)
+    xin, Bm, Cm = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])   # [B,1,H]
+    A = -jnp.exp(p["A_log"])
+    xh = xin.reshape(B, H, P)
+    dA = jnp.exp(dt[:, 0] * A[None, :])                   # [B,H]
+    dBx = jnp.einsum("bn,bh,bhp->bhpn", Bm[:, 0].astype(F32),
+                     dt[:, 0], xh.astype(F32))
+    h = state.ssm * dA[:, :, None, None] + dBx
+    y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(F32), h)
+    y = y + xh.astype(F32) * p["D"][None, :, None]
+    y = y.reshape(B, 1, cfg.d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm({"scale": p["out_norm"]}, y)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    return out, MambaState(ssm=h, conv=conv_tail)
+
+
+def init_state(cfg: ArchConfig, batch: int) -> MambaState:
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return MambaState(
+        ssm=jnp.zeros((batch, cfg.n_ssm_heads, cfg.ssm_head_dim,
+                       cfg.ssm_state), F32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, conv_dim), F32))

@@ -1,0 +1,94 @@
+"""Parameter schema: single source of truth for shapes, dtypes, logical
+sharding axes and initializers.
+
+A model declares its parameters once as a (nested) dict of ``ParamDef``;
+from that one schema we derive
+  * ``init(rng)``            — real parameters (smoke tests, examples)
+  * ``abstract()``           — ShapeDtypeStructs (dry-run, no allocation)
+  * ``specs(rules, mesh)``   — NamedShardings via logical-axis rules
+so shapes and shardings can never drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]          # logical axis names, len == ndim
+    dtype: jnp.dtype = jnp.bfloat16
+    init: str = "normal"                  # normal | zeros | ones | embed
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def stack(n: int, tree):
+    """Prepend a scanned-layers dimension to every ParamDef in a tree."""
+    return jax.tree.map(
+        lambda d: ParamDef((n, *d.shape), ("layers", *d.axes), d.dtype,
+                           d.init),
+        tree, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def _is_def(x):
+    return isinstance(x, ParamDef)
+
+
+def init(tree, rng: jax.Array):
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_def)
+    rngs = jax.random.split(rng, len(leaves))
+    out = []
+    for d, r in zip(leaves, rngs):
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, d.dtype))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, d.dtype))
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            scale = 1.0 / math.sqrt(max(fan_in, 1))
+            out.append((jax.random.normal(r, d.shape, jnp.float32)
+                        * scale).astype(d.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract(tree):
+    return jax.tree.map(lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype),
+                        tree, is_leaf=_is_def)
+
+
+def logical_specs(tree):
+    """PartitionSpec pytree of *logical* axis names."""
+    return jax.tree.map(lambda d: P(*d.axes), tree, is_leaf=_is_def)
+
+
+def to_mesh_specs(logical_tree, rules: dict[str, str | tuple | None]):
+    """Map logical axis names to mesh axis names via rules."""
+    def conv(spec: P) -> P:
+        out = []
+        for ax in spec:
+            if ax is None:
+                out.append(None)
+            else:
+                out.append(rules.get(ax))
+        return P(*out)
+    return jax.tree.map(conv, logical_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def shardings(tree, rules, mesh: Mesh):
+    mesh_specs = to_mesh_specs(logical_specs(tree), rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), mesh_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def n_params(tree) -> int:
+    return sum(math.prod(d.shape)
+               for d in jax.tree.leaves(tree, is_leaf=_is_def))

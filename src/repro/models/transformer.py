@@ -1,0 +1,348 @@
+"""Model assembly for the 10-arch zoo.
+
+Depth is organized as *superblocks*: the layer pattern (cfg.pattern, e.g.
+gemma3's "LLLLLG", jamba's "MAMMMMMM"-style 1:7) defines one superblock; the
+model is a ``lax.scan`` over ``n_superblocks`` stacked parameter pytrees.
+Scan keeps the HLO small (one superblock body regardless of depth) — the
+knob that keeps 32 dry-run cells compilable on one CPU core — and remat is
+applied at superblock granularity.
+
+Layer kinds: 'G' global attention, 'L' local (sliding-window) attention,
+'M' mamba(2) mixer.  FFN per layer: dense MLP, MoE (every cfg.moe_every-th
+layer), or none (mamba2's pure-mixer blocks, d_ff == 0).
+
+Decode is paged: attention layers carry per-layer KV page pools indexed by
+Honeycomb-managed block tables; mamba layers carry recurrent states (their
+"page" analogue).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as ll
+from . import mamba2 as mm
+from . import moe as me
+from .config import ArchConfig
+from .schema import ParamDef, stack
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------- structure
+def layer_kinds(cfg: ArchConfig) -> list[tuple[str, str | None]]:
+    """[(mixer_kind, ffn_kind)] for one superblock."""
+    out = []
+    for i, kind in enumerate(cfg.pattern):
+        if cfg.d_ff == 0:
+            ffn = None
+        elif cfg.n_experts and (i % cfg.moe_every == cfg.moe_every - 1
+                                or cfg.moe_every == 1):
+            ffn = "moe"
+        else:
+            ffn = "mlp"
+        out.append((kind, ffn))
+    return out
+
+
+def _layer_schema(cfg: ArchConfig, kind: str, ffn: str | None):
+    s: dict[str, Any] = {"ln1": ll.rmsnorm_schema(cfg.d_model)}
+    if kind == "M":
+        s["mamba"] = mm.mamba_schema(cfg)
+    else:
+        s["attn"] = ll.attention_schema(cfg)
+    if cfg.n_enc_layers and kind != "M":
+        s["ln_x"] = ll.rmsnorm_schema(cfg.d_model)
+        s["xattn"] = ll.cross_attention_schema(cfg)
+    if ffn is not None:
+        s["ln2"] = ll.rmsnorm_schema(cfg.d_model)
+        s["ffn"] = me.moe_schema(cfg) if ffn == "moe" else ll.mlp_schema(cfg)
+    return s
+
+
+def superblock_schema(cfg: ArchConfig):
+    return {f"l{i}": _layer_schema(cfg, kind, ffn)
+            for i, (kind, ffn) in enumerate(layer_kinds(cfg))}
+
+
+def _encoder_layer_schema(cfg: ArchConfig):
+    return {"ln1": ll.rmsnorm_schema(cfg.d_model),
+            "attn": ll.attention_schema(cfg),
+            "ln2": ll.rmsnorm_schema(cfg.d_model),
+            "mlp": ll.mlp_schema(cfg)}
+
+
+def schema(cfg: ArchConfig):
+    d, v = cfg.d_model, cfg.vocab
+    s: dict[str, Any] = {
+        "embed": ParamDef((v, d), ("vocab", "embed"), jnp.bfloat16, "embed"),
+        "blocks": stack(cfg.n_superblocks, superblock_schema(cfg)),
+        "final_norm": ll.rmsnorm_schema(d),
+        "lm_head": ParamDef((d, v), ("embed", "vocab")),
+    }
+    if cfg.n_enc_layers:
+        s["enc_blocks"] = stack(cfg.n_enc_layers, _encoder_layer_schema(cfg))
+        s["enc_norm"] = ll.rmsnorm_schema(d)
+    return s
+
+
+def moe_param_count(cfg: ArchConfig) -> int:
+    if not cfg.n_experts:
+        return 0
+    from .schema import n_params
+    per_layer = n_params(me.moe_schema(cfg)) - cfg.d_model * cfg.n_experts
+    n_moe_layers = sum(1 for _, f in layer_kinds(cfg)
+                       if f == "moe") * cfg.n_superblocks
+    return per_layer * n_moe_layers
+
+
+# ----------------------------------------------------------------- forward
+def _apply_layer_train(p, x, cfg: ArchConfig, kind: str, ffn: str | None,
+                       enc_out=None, moe_impl: str = "dense",
+                       positions=None, shard=ll._noshard):
+    h = ll.rmsnorm(p["ln1"], x)
+    if kind == "M":
+        x = x + mm.mamba_block(p["mamba"], h, cfg, shard=shard)
+    else:
+        a, _ = ll.attention(p["attn"], h, cfg, local=(kind == "L"),
+                            positions=positions, shard=shard)
+        x = x + a
+    if enc_out is not None and kind != "M":
+        h = ll.rmsnorm(p["ln_x"], x)
+        x = x + ll.cross_attention(p["xattn"], h, enc_out, cfg, shard=shard)
+    if ffn is not None:
+        h = ll.rmsnorm(p["ln2"], x)
+        f = me.moe(p["ffn"], h, cfg, impl=moe_impl, shard=shard) \
+            if ffn == "moe" else ll.mlp(p["ffn"], h, shard=shard)
+        x = x + f
+    return shard(x, ("batch", "seq", None))
+
+
+def forward(params, cfg: ArchConfig, tokens=None, embeds=None, enc_out=None,
+            moe_impl: str = "dense", remat: bool = True, shard=ll._noshard,
+            unroll: bool = False):
+    """Train/prefill forward -> logits [B, S, V]."""
+    if embeds is None:
+        x = params["embed"][tokens]
+    else:
+        x = embeds.astype(params["lm_head"].dtype)
+    x = shard(x, ("batch", "seq", None))
+    kinds = layer_kinds(cfg)
+
+    def sb(x, blk):
+        for i, (kind, ffn) in enumerate(kinds):
+            x = _apply_layer_train(blk[f"l{i}"], x, cfg, kind, ffn,
+                                   enc_out=enc_out, moe_impl=moe_impl,
+                                   shard=shard)
+        return x, None
+
+    body = jax.checkpoint(sb) if remat else sb
+    x, _ = jax.lax.scan(body, x, params["blocks"],
+                        unroll=cfg.n_superblocks if unroll else 1)
+    x = ll.rmsnorm(params["final_norm"], x)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"]).astype(F32)
+    logits = shard(logits, ("batch", "seq", "vocab_act"))
+    if cfg.final_softcap:
+        logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+    return logits
+
+
+def encode(params, cfg: ArchConfig, enc_embeds, remat: bool = True,
+           shard=ll._noshard, unroll: bool = False):
+    """Encoder stack (seamless): bidirectional attention over frames."""
+    x = enc_embeds.astype(params["lm_head"].dtype)
+    x = shard(x, ("batch", "seq", None))
+
+    def layer(x, p):
+        h = ll.rmsnorm(p["ln1"], x)
+        # full (non-causal) self-attention via the cross-attn primitive
+        a = ll.cross_attention(p["attn"], h, h, cfg, shard=shard)
+        x = x + a
+        h = ll.rmsnorm(p["ln2"], x)
+        return shard(x + ll.mlp(p["mlp"], h, shard=shard),
+                     ("batch", "seq", None)), None
+
+    body = jax.checkpoint(layer) if remat else layer
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"],
+                        unroll=cfg.n_enc_layers if unroll else 1)
+    return ll.rmsnorm(params["enc_norm"], x)
+
+
+def lm_loss(params, cfg: ArchConfig, batch, moe_impl: str = "dense",
+            remat: bool = True, shard=ll._noshard, unroll: bool = False):
+    """Next-token cross entropy.  batch: {tokens|embeds, labels, [enc_embeds]}.
+
+    CE via (logsumexp - gold logit): avoids materializing a second
+    [B, S, V] log-probability array next to the logits."""
+    enc_out = None
+    if cfg.n_enc_layers:
+        enc_out = encode(params, cfg, batch["enc_embeds"], remat=remat,
+                         shard=shard, unroll=unroll)
+    logits = forward(params, cfg, tokens=batch.get("tokens"),
+                     embeds=batch.get("embeds"), enc_out=enc_out,
+                     moe_impl=moe_impl, remat=remat, shard=shard,
+                     unroll=unroll)
+    labels = batch["labels"]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(F32)
+    return ((lse - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def prefill(params, cfg: ArchConfig, tokens=None, embeds=None, enc_out=None,
+            page_size: int = 256, moe_impl: str = "dense",
+            remat: bool = True, shard=ll._noshard, unroll: bool = False,
+            last_pos=None):
+    """Prefill: forward over the prompt, returning last-token logits and the
+    decode caches (KV paged with identity block tables; mamba states).
+
+    ``last_pos`` ([B] or scalar) selects which position's logits to return
+    (page-padded prompts: the real last token, not the pad tail).
+    Returns (logits [B, V], DecodeCache).
+    """
+    if embeds is None:
+        x = params["embed"][tokens]
+    else:
+        x = embeds.astype(params["lm_head"].dtype)
+    x = shard(x, ("batch", "seq", None))
+    B, S, _ = x.shape
+    assert S % page_size == 0
+    pps = S // page_size
+    kinds = layer_kinds(cfg)
+
+    def sb(x, blk):
+        caches = {}
+        for i, (kind, ffn) in enumerate(kinds):
+            p = blk[f"l{i}"]
+            h = ll.rmsnorm(p["ln1"], x)
+            if kind == "M":
+                y, st = mm.mamba_block(p["mamba"], h, cfg, return_state=True,
+                                       shard=shard)
+                x = x + y
+                caches[f"l{i}"] = {"ssm": st.ssm, "conv": st.conv}
+            else:
+                a, (k, v) = ll.attention(p["attn"], h, cfg,
+                                         local=(kind == "L"), shard=shard)
+                x = x + a
+                kv_shape = (B * pps, page_size, cfg.n_kv_heads, cfg.head_dim)
+                caches[f"l{i}"] = {"k_pages": k.reshape(kv_shape),
+                                   "v_pages": v.reshape(kv_shape)}
+            if enc_out is not None and kind != "M":
+                h = ll.rmsnorm(p["ln_x"], x)
+                x = x + ll.cross_attention(p["xattn"], h, enc_out, cfg,
+                                           shard=shard)
+            if ffn is not None:
+                h = ll.rmsnorm(p["ln2"], x)
+                f = me.moe(p["ffn"], h, cfg, impl=moe_impl, shard=shard) \
+                    if ffn == "moe" else ll.mlp(p["ffn"], h, shard=shard)
+                x = x + f
+        return shard(x, ("batch", "seq", None)), caches
+
+    body = jax.checkpoint(sb) if remat else sb
+    x, layer_caches = jax.lax.scan(body, x, params["blocks"],
+                                   unroll=cfg.n_superblocks if unroll else 1)
+    if last_pos is None:
+        xl = x[:, -1:]
+    else:
+        idx = jnp.broadcast_to(jnp.asarray(last_pos), (B,))
+        xl = x[jnp.arange(B), idx][:, None]
+    xl = ll.rmsnorm(params["final_norm"], xl)
+    logits = jnp.einsum("bsd,dv->bsv", xl, params["lm_head"]).astype(F32)
+    if cfg.final_softcap:
+        logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+    block_tables = jnp.arange(B * pps, dtype=jnp.int32).reshape(B, pps)
+    seq_lens = jnp.full((B,), S, jnp.int32)
+    return logits[:, 0], DecodeCache(layer_caches, block_tables, seq_lens)
+
+
+# ------------------------------------------------------------------ decode
+class DecodeCache(NamedTuple):
+    """Scan-stacked per-superblock caches + shared block tables."""
+    layers: Any          # pytree: per-layer pools / mamba states
+    block_tables: Any    # i32 [B, PPS] — Honeycomb page-table lookups
+    seq_lens: Any        # i32 [B]
+
+
+def layer_cache_schema(cfg: ArchConfig, batch: int, pages_per_seq: int,
+                       page_size: int):
+    """ParamDef tree for one superblock's caches (stacked by the caller)."""
+    n_pages = batch * pages_per_seq
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    # logical axes; per-arch sharding rules decide whether kv_heads or
+    # head_dim maps onto the mesh's model axis (divisibility-dependent)
+    kv_axes = ("kv_pages", None, "kv_heads", "head_dim")
+    out = {}
+    for i, (kind, _) in enumerate(layer_kinds(cfg)):
+        if kind == "M":
+            conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+            out[f"l{i}"] = {
+                "ssm": ParamDef((batch, cfg.n_ssm_heads, cfg.ssm_head_dim,
+                                 cfg.ssm_state), ("batch", "heads", None,
+                                                  None), jnp.float32,
+                                "zeros"),
+                "conv": ParamDef((batch, cfg.conv_width - 1, conv_dim),
+                                 ("batch", None, "mlp"), jnp.float32,
+                                 "zeros"),
+            }
+        else:
+            out[f"l{i}"] = {
+                "k_pages": ParamDef((n_pages, page_size, kv, hd), kv_axes),
+                "v_pages": ParamDef((n_pages, page_size, kv, hd), kv_axes),
+            }
+    return out
+
+
+def decode_step(params, cfg: ArchConfig, cache: DecodeCache, tokens,
+                page_size: int, enc_out=None, attn_backend: str | None = None,
+                shard=ll._noshard, unroll: bool = False,
+                attn_local_impl=None):
+    """One decode token for the whole batch.
+
+    tokens: [B, 1] int32; returns (logits [B, V], new DecodeCache).
+    """
+    x = shard(params["embed"][tokens], ("batch", "seq", None))
+    kinds = layer_kinds(cfg)
+    bt, lens = cache.block_tables, cache.seq_lens
+
+    def sb(x, inp):
+        blk, lcache = inp
+        new_cache = {}
+        for i, (kind, _ffn) in enumerate(kinds):
+            p = blk[f"l{i}"]
+            c = lcache[f"l{i}"]
+            h = ll.rmsnorm(p["ln1"], x)
+            if kind == "M":
+                y, st = mm.mamba_decode(
+                    p["mamba"], h, mm.MambaState(c["ssm"], c["conv"]), cfg)
+                x = x + y
+                new_cache[f"l{i}"] = {"ssm": st.ssm, "conv": st.conv}
+            else:
+                y, (kp, vp) = ll.decode_attention(
+                    p["attn"], h, cfg, c["k_pages"], c["v_pages"], bt, lens,
+                    local=(kind == "L"), page_size=page_size,
+                    backend=attn_backend, shard=shard,
+                    local_impl=attn_local_impl)
+                x = x + y
+                new_cache[f"l{i}"] = {"k_pages": kp, "v_pages": vp}
+            if enc_out is not None and kind != "M":
+                h = ll.rmsnorm(p["ln_x"], x)
+                x = x + ll.cross_attention(p["xattn"], h, enc_out, cfg,
+                                           shard=shard)
+            if _ffn is not None:
+                h = ll.rmsnorm(p["ln2"], x)
+                f = me.moe(p["ffn"], h, cfg) if _ffn == "moe" \
+                    else ll.mlp(p["ffn"], h)
+                x = x + f
+        return x, new_cache
+
+    x, new_layers = jax.lax.scan(sb, x, (params["blocks"], cache.layers),
+                                 unroll=cfg.n_superblocks if unroll else 1)
+    x = ll.rmsnorm(params["final_norm"], x)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"]).astype(F32)
+    logits = shard(logits, ("batch", "seq", "vocab_act"))
+    if cfg.final_softcap:
+        logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+    return logits[:, 0], DecodeCache(new_layers, bt, lens + 1)

@@ -1,0 +1,181 @@
+"""Batched serving engine: continuous batching over the paged KV cache.
+
+The request path mirrors the paper's architecture end to end:
+  network ingest -> slot admission (continuous batching) -> block-table
+  assembly via batched Honeycomb GETs (the accelerator read path) -> jitted
+  decode step (paged attention) -> in-order response delivery.  Page
+  allocation and completion-time frees are host-side Honeycomb writes —
+  the paper's read/write split, transplanted.
+
+Every active request owns a fixed batch *slot*: attention state lives in
+pages (slot-independent, indexed through the Honeycomb table) while mamba
+recurrent states live at the slot row — both are handed from prefill to
+decode through the same DecodeCache pytree the dry-run lowers.
+
+Page 0 is reserved scratch: idle slots' block tables point at it, so their
+(ignored) decode lanes can never corrupt a live page.
+
+This runs for real at CPU smoke scale (tests + examples) and is the same
+code path the dry-run lowers at production scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import schema as sc
+from repro.models import transformer as tf
+from repro.models.config import ArchConfig
+from repro.serving.kv_cache import PagedKVCache, page_key
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # int32 [S]
+    max_new_tokens: int = 16
+    out_tokens: list = dataclasses.field(default_factory=list)
+    seq_len: int = 0
+    slot: int = -1
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, params=None, *, batch_size: int = 4,
+                 max_seq: int = 256, page_size: int = 32, seed: int = 0):
+        assert max_seq % page_size == 0
+        self.cfg = cfg
+        self.page_size = page_size
+        self.max_seq = max_seq
+        self.batch_size = batch_size
+        self.pps = max_seq // page_size
+        self.params = params if params is not None else sc.init(
+            tf.schema(cfg), jax.random.key(seed))
+        n_pages = batch_size * self.pps + 1     # +1: reserved scratch page 0
+        self.kv = PagedKVCache(n_pages, page_size)
+        self.kv.free_pages = list(range(n_pages - 1, 0, -1))  # reserve 0
+        cache_tree = sc.stack(
+            cfg.n_superblocks,
+            tf.layer_cache_schema(cfg, batch_size, self.pps, page_size))
+
+        def mk(path, d):
+            names = {getattr(p, "key", None) for p in path}
+            if names & {"k_pages", "v_pages"}:   # pool rows = physical pages
+                return jnp.zeros((d.shape[0], n_pages, *d.shape[2:]),
+                                 d.dtype)
+            return jnp.zeros(d.shape, d.dtype)   # mamba states: slot rows
+
+        self._pools = jax.tree_util.tree_map_with_path(
+            mk, sc.abstract(cache_tree))
+        self._slots: list[int | None] = [None] * batch_size
+        self._requests: dict[int, Request] = {}
+        self._next_rid = 0
+        self.stats = {"prefills": 0, "decode_steps": 0, "tokens": 0}
+
+        self._decode = jax.jit(
+            lambda p, cache, toks: tf.decode_step(
+                p, cfg, cache, toks, page_size=page_size,
+                attn_backend="ref"),
+            donate_argnums=(1,))
+        self._prefill = jax.jit(
+            lambda p, t, last: tf.prefill(p, cfg, tokens=t,
+                                          page_size=page_size,
+                                          last_pos=last))
+
+    # ------------------------------------------------------------- intake
+    def submit(self, prompt, max_new_tokens: int = 16) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self._requests[rid] = Request(rid, np.asarray(prompt, np.int32),
+                                      max_new_tokens=max_new_tokens)
+        return rid
+
+    # ------------------------------------------------------------ prefill
+    def _prefill_one(self, r: Request, slot: int):
+        S = len(r.prompt)
+        pad = -S % self.page_size
+        toks = np.pad(r.prompt, (0, pad))
+        n_blocks = len(toks) // self.page_size
+        pages = np.asarray([self.kv.allocate(r.rid, b)
+                            for b in range(n_blocks)])
+        logits, cache = self._prefill(self.params, toks[None, :],
+                                      jnp.int32(S - 1))
+
+        def place(path, pool, new):
+            names = {getattr(p, "key", None) for p in path}
+            if names & {"k_pages", "v_pages"}:
+                # KV pages -> allocated physical page slots
+                return pool.at[:, pages].set(new[:, :n_blocks])
+            # mamba state [n_sb, 1, ...] -> this request's slot row
+            return pool.at[:, slot].set(new[:, 0])
+
+        self._pools = jax.tree_util.tree_map_with_path(
+            place, self._pools, cache.layers)
+        r.seq_len = S
+        r.slot = slot
+        self._slots[slot] = r.rid
+        r.out_tokens.append(int(np.argmax(np.asarray(logits)[0])))
+        self.stats["prefills"] += 1
+        self.stats["tokens"] += 1
+
+    # ------------------------------------------------------------- decode
+    def _active(self) -> list[Request]:
+        return [self._requests[rid] for rid in self._slots
+                if rid is not None and not self._requests[rid].done]
+
+    def _decode_batch(self):
+        act = self._active()
+        if not act:
+            return
+        B = self.batch_size
+        for r in act:   # page for the next token (host-side Honeycomb PUT)
+            blk = r.seq_len // self.page_size
+            if self.kv.table.get(page_key(r.rid, blk)) is None:
+                self.kv.allocate(r.rid, blk)
+        bt = np.zeros((B, self.pps), np.int32)
+        lens = np.zeros((B,), np.int32)
+        toks = np.zeros((B, 1), np.int32)
+        rows = self.kv.lookup_block_tables([r.rid for r in act], self.pps)
+        for i, r in enumerate(act):
+            bt[r.slot] = rows[i]
+            lens[r.slot] = r.seq_len
+            toks[r.slot, 0] = r.out_tokens[-1]
+
+        cache = tf.DecodeCache(layers=self._pools,
+                               block_tables=jnp.asarray(bt),
+                               seq_lens=jnp.asarray(lens))
+        logits, cache = self._decode(self.params, cache, jnp.asarray(toks))
+        self._pools = cache.layers
+        out = np.asarray(jnp.argmax(logits, axis=-1))
+        for r in act:
+            r.seq_len += 1
+            r.out_tokens.append(int(out[r.slot]))
+            self.stats["tokens"] += 1
+            if len(r.out_tokens) >= r.max_new_tokens \
+                    or r.seq_len >= self.max_seq - 1:
+                r.done = True
+                self._slots[r.slot] = None
+                self.kv.free_seq(r.rid, -(-(r.seq_len + 1)
+                                          // self.page_size))
+        self.stats["decode_steps"] += 1
+
+    # ----------------------------------------------------------------- run
+    def step(self):
+        """One scheduler tick: admit into free slots, then decode."""
+        waiting = [r for r in self._requests.values()
+                   if r.slot < 0 and not r.done]
+        for r in waiting:
+            if None not in self._slots:
+                break
+            self._prefill_one(r, self._slots.index(None))
+        self._decode_batch()
+
+    def run_until_done(self, max_ticks: int = 1000):
+        for _ in range(max_ticks):
+            if all(r.done for r in self._requests.values()):
+                break
+            self.step()
+        return {rid: r.out_tokens for rid, r in self._requests.items()}

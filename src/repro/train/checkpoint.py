@@ -1,0 +1,151 @@
+"""Fault-tolerant checkpointing.
+
+Design points (the 1000-node posture):
+  * atomic:   leaves written to ``<dir>.tmp``, manifest last, then a single
+              rename publishes the checkpoint — a died writer leaves no
+              half-readable state.
+  * async:    device->host gather happens on the caller thread (cheap);
+              serialization runs on a worker thread so the train loop
+              overlaps step N+1 with persisting step N.
+  * elastic:  the manifest stores shapes/dtypes + the *logical* tree, not
+              shardings.  ``restore`` re-shards onto whatever mesh is alive
+              (different data-axis size, different chip count).
+  * catalog:  every checkpoint registers into a Honeycomb ordered store
+              (step -> path); "resume from the newest checkpoint <= S" is a
+              floor SCAN — the paper's own lookup semantics (DESIGN.md §4).
+  * retention: keep the newest K checkpoints, delete older ones (and their
+              catalog entries) after a successful publish.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+
+import jax
+import ml_dtypes
+import numpy as np
+
+from repro.core import HoneycombConfig, HoneycombStore
+from repro.core.keys import int_key
+
+_BF16 = np.dtype(ml_dtypes.bfloat16)
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def _to_savable(a: np.ndarray) -> tuple[np.ndarray, str]:
+    """numpy can't serialize bfloat16 — persist a uint16 view + dtype tag."""
+    if a.dtype == _BF16:
+        return a.view(np.uint16), "bfloat16"
+    return a, str(a.dtype)
+
+
+def _from_savable(a: np.ndarray, dtype: str) -> np.ndarray:
+    if dtype == "bfloat16":
+        return a.view(_BF16)
+    return a
+
+
+class CheckpointManager:
+    def __init__(self, root: str | Path, keep: int = 3,
+                 catalog: HoneycombStore | None = None):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.catalog = catalog or HoneycombStore(
+            HoneycombConfig(node_cap=32, log_cap=8, n_shortcuts=4))
+        self._worker: threading.Thread | None = None
+        self._load_existing()
+
+    def _load_existing(self):
+        for d in sorted(self.root.glob("step_*")):
+            if (d / "manifest.json").exists():
+                step = int(d.name.split("_")[1])
+                self.catalog.put(int_key(step), str(d).encode())
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, tree, blocking: bool = True,
+             extra: dict | None = None) -> Path:
+        """Checkpoint a pytree.  With blocking=False the device->host copy
+        happens now and serialization happens on a worker thread."""
+        leaves, treedef = _flatten(tree)
+        host_leaves = [np.asarray(x) for x in leaves]   # device -> host
+        final = self.root / f"step_{step:010d}"
+
+        def work():
+            tmp = final.with_suffix(".tmp")
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            shapes = []
+            for i, a in enumerate(host_leaves):
+                savable, dtype = _to_savable(a)
+                np.save(tmp / f"leaf_{i:05d}.npy", savable)
+                shapes.append([list(a.shape), dtype])
+            manifest = {"step": step, "n_leaves": len(host_leaves),
+                        "shapes": shapes,
+                        "treedef": str(treedef),
+                        "extra": extra or {}}
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+            if final.exists():
+                shutil.rmtree(final)
+            os.rename(tmp, final)                      # atomic publish
+            self.catalog.put(int_key(step), str(final).encode())
+            self._retain()
+
+        if blocking:
+            work()
+        else:
+            self.wait()
+            self._worker = threading.Thread(target=work, daemon=True)
+            self._worker.start()
+        return final
+
+    def wait(self):
+        if self._worker is not None:
+            self._worker.join()
+            self._worker = None
+
+    def _retain(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            d = self.root / f"step_{s:010d}"
+            if d.exists():
+                shutil.rmtree(d)
+            self.catalog.delete(int_key(s))
+
+    # ---------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        items = self.catalog.scan(int_key(0), int_key(2 ** 62))
+        return [int.from_bytes(k, "big") for k, _ in items]
+
+    def latest_step(self, at_or_before: int | None = None) -> int | None:
+        """Floor lookup through the Honeycomb catalog (SCAN semantics)."""
+        if at_or_before is None:
+            steps = self.all_steps()
+            return steps[-1] if steps else None
+        hit = self.catalog.scan(int_key(at_or_before), int_key(at_or_before))
+        return int.from_bytes(hit[0][0], "big") if hit else None
+
+    def restore(self, step: int, like_tree, shardings=None):
+        """Load a checkpoint into the structure of ``like_tree``; with
+        ``shardings`` (a matching pytree of NamedSharding) the leaves are
+        placed sharded — onto any mesh (elastic re-shard)."""
+        d = self.root / f"step_{step:010d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        _, treedef = _flatten(like_tree)
+        leaves = [_from_savable(np.load(d / f"leaf_{i:05d}.npy"),
+                                manifest["shapes"][i][1])
+                  for i in range(manifest["n_leaves"])]
+        tree = jax.tree.unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.tree.map(jax.device_put, tree, shardings)
+        else:
+            tree = jax.tree.map(jax.numpy.asarray, tree)
+        return tree, manifest

@@ -1,0 +1,170 @@
+"""Host-side B+Tree: property tests against a dict oracle + protocol
+invariants (MVCC snapshots, GC epochs, lock words, underflow merges)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.btree import HoneycombTree
+from repro.core.config import HoneycombConfig
+from repro.core.keys import int_key
+
+SMALL = HoneycombConfig(node_cap=16, log_cap=4, n_shortcuts=4)
+
+
+def apply_ops(tree, oracle, ops):
+    for op, k, i in ops:
+        key = int_key(k)
+        if op == 0:
+            v = f"v{i}".encode()
+            tree.put(key, v)
+            oracle[key] = v
+        elif op == 1:
+            v = f"u{i}".encode()
+            tree.update(key, v)
+            oracle[key] = v
+        else:
+            tree.delete(key)
+            oracle.pop(key, None)
+
+
+ops_strategy = st.lists(
+    st.tuples(st.integers(0, 2), st.integers(0, 120),
+              st.integers(0, 10 ** 6)),
+    min_size=1, max_size=300)
+
+
+@given(ops_strategy)
+@settings(max_examples=25, deadline=None)
+def test_tree_matches_dict_oracle(ops):
+    tree = HoneycombTree(SMALL, heap_capacity=64)
+    oracle = {}
+    apply_ops(tree, oracle, ops)
+    tree.check_invariants()
+    for k in range(121):
+        assert tree.get(int_key(k)) == oracle.get(int_key(k))
+    items = tree.scan(int_key(0), int_key(121))
+    assert items == sorted(oracle.items())
+
+
+@given(ops_strategy, st.integers(0, 120), st.integers(1, 8))
+@settings(max_examples=25, deadline=None)
+def test_scan_floor_semantics(ops, lo, width):
+    tree = HoneycombTree(SMALL, heap_capacity=64)
+    oracle = {}
+    apply_ops(tree, oracle, ops)
+    lo_k, hi_k = int_key(lo), int_key(min(lo + width, 121))
+    got = tree.scan(lo_k, hi_k)
+    floor = max((k for k in oracle if k <= lo_k), default=None)
+    want = [(k, oracle[k]) for k in sorted(oracle)
+            if (k == floor or k > lo_k) and k <= hi_k]
+    assert got == want
+
+
+def test_mvcc_snapshot_stability():
+    tree = HoneycombTree(SMALL, heap_capacity=64)
+    for i in range(60):
+        tree.put(int_key(i), b"a%d" % i)
+    rv = tree.versions.read_version()
+    before = tree.scan(int_key(0), int_key(59), read_version=rv)
+    for i in range(60):
+        tree.update(int_key(i), b"b%d" % i)
+    for i in range(0, 60, 2):
+        tree.delete(int_key(i))
+    assert tree.scan(int_key(0), int_key(59), read_version=rv) == before
+    now = dict(tree.scan(int_key(0), int_key(59)))
+    assert all(int.from_bytes(k, "big") % 2 == 1 for k in now)
+
+
+def test_release_in_version_order():
+    """Writers release to readers in write-version order (Section 3.2)."""
+    from repro.core.mvcc import VersionManager
+    vm = VersionManager(True)
+    a, b, c = (vm.acquire_write_version() for _ in range(3))
+    vm.release(b)
+    assert vm.global_read_version == 0          # a still outstanding
+    vm.release(a)
+    assert vm.global_read_version == b          # cascades a then b
+    vm.release(c)
+    assert vm.global_read_version == c
+    assert vm.device_read_version == c
+
+
+def test_gc_waits_for_accelerator_epoch():
+    tree = HoneycombTree(SMALL, heap_capacity=64)
+    for i in range(200):
+        tree.put(int_key(i), b"x")
+    tree.epochs.cpu_begin(0)
+    tree.gc.collect()                           # drain pre-epoch garbage
+    lo, hi = tree.epochs.accel_begin_batch(8)   # inflight batch
+    for i in range(40):
+        tree.update(int_key(i), b"y" * 8)
+    pending = len(tree.gc.list)
+    assert pending > 0
+    assert tree.gc.collect() == 0               # pinned by the open epoch
+    tree.epochs.accel_complete_batch(lo, hi)
+    tree.epochs.cpu_begin(0)                    # host thread moves on
+    assert tree.gc.collect() == pending
+
+
+def test_heap_slot_reuse_after_gc():
+    tree = HoneycombTree(SMALL, heap_capacity=64)
+    for i in range(300):
+        tree.put(int_key(i % 50), b"v" * 8)
+        if i % 64 == 0:
+            tree.epochs.cpu_begin(0)
+            tree.gc.collect()
+    tree.epochs.cpu_begin(0)
+    tree.gc.collect()
+    assert tree.heap.live_slots < 40            # slots recycled, not leaked
+
+
+def test_underflow_merges_and_empties():
+    tree = HoneycombTree(SMALL, heap_capacity=128)
+    for i in range(200):
+        tree.put(int_key(i), b"x")
+    h_before = tree.tree_height if hasattr(tree, "tree_height") else tree.height
+    for i in range(199, 3, -1):
+        tree.delete(int_key(i))
+    tree.check_invariants()
+    assert tree.stats.node_merges > 0
+    assert [int.from_bytes(k, "big") for k, _ in
+            tree.scan(int_key(0), int_key(300))] == [0, 1, 2, 3]
+
+
+def test_overflow_values_roundtrip():
+    cfg = HoneycombConfig(node_cap=16, log_cap=4, n_shortcuts=4, val_words=2)
+    tree = HoneycombTree(cfg, heap_capacity=64)
+    big = bytes(range(200))
+    tree.put(int_key(1), big)
+    tree.put(int_key(2), b"small")
+    assert tree.get(int_key(1)) == big
+    assert tree.get(int_key(2)) == b"small"
+    tree.update(int_key(1), big * 2)
+    assert tree.get(int_key(1)) == big * 2
+
+
+def test_lock_word_protocol():
+    tree = HoneycombTree(SMALL)
+    phys = tree.pt.lookup(tree.root_lid)
+    seq = tree.heap.seqno(phys)
+    assert tree.heap.try_lock(phys, seq)
+    assert not tree.heap.try_lock(phys, seq)        # already locked
+    tree.heap.unlock_bump(phys)
+    assert tree.heap.seqno(phys) == seq + 1
+    assert not tree.heap.try_lock(phys, seq)        # stale seqno -> restart
+    assert tree.heap.try_lock(phys, seq + 1)
+    tree.heap.unlock_bump(phys)
+
+
+def test_pagetable_sync_amortization():
+    """Log blocks amortize accelerator page-table updates: syncs per write
+    ~ 1/log_cap, the paper's core PCIe argument."""
+    tree = HoneycombTree(HoneycombConfig(node_cap=32, log_cap=8,
+                                         n_shortcuts=4))
+    n = 400
+    base = tree.pt.sync_commands
+    rng = np.random.default_rng(0)
+    for i in rng.integers(0, 200, n):
+        tree.put(int_key(int(i)), b"v")
+    per_write = (tree.pt.sync_commands - base) / n
+    assert per_write < 0.5, per_write

@@ -1,0 +1,144 @@
+"""Distribution: sharding rules, HLO collective parsing, and an 8-device
+subprocess check (sharded step + elastic checkpoint reshard).
+
+Device-count-dependent tests run in a subprocess so the main pytest
+process keeps its single CPU device (the dry-run owns the 512-device
+configuration; see launch/dryrun.py).
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.configs import get_config
+from repro.distributed.sharding import ShardingPolicy, make_rules
+from repro.launch import hlo_analysis as hla
+from repro.models.config import shape_by_name
+
+
+class _FakeMesh:
+    def __init__(self, shape, names):
+        import numpy as np
+        self.axis_names = names
+        self.devices = np.zeros(shape)
+
+
+def test_rules_divisibility():
+    mesh = _FakeMesh((16, 16), ("data", "model"))
+    cfg = get_config("qwen2.5-3b")
+    r = make_rules(cfg, mesh, shape_by_name("train_4k"))
+    assert r["heads"] == "model"        # 16*128 divisible
+    assert r["vocab"] == "model"        # 151936 divisible
+    assert r["embed"] == "data"
+    assert r["kv_heads"] is None        # kv=2 not divisible by 16
+    assert r["head_dim"] == "model"     # 128 divisible
+
+    cfg2 = get_config("mamba2-1.3b")
+    r2 = make_rules(cfg2, mesh, shape_by_name("train_4k"))
+    assert r2["heads_act"] == "model"   # 64 ssm heads divisible
+    assert r2["mlp"] == "model"         # d_inner divisible
+
+
+def test_rules_multipod_batch():
+    mesh = _FakeMesh((2, 16, 16), ("pod", "data", "model"))
+    cfg = get_config("qwen2.5-3b")
+    r = make_rules(cfg, mesh, shape_by_name("train_4k"))
+    assert r["batch"] == ("pod", "data")
+    r_long = make_rules(cfg, mesh, shape_by_name("long_500k"))
+    assert r_long["batch"] is None      # B=1 cannot shard
+
+
+def test_collective_parser():
+    hlo = textwrap.dedent("""\
+        %all-reduce.1 = f32[256,4096]{1,0} all-reduce(%x), channel_id=1
+        %ag = bf16[64,128]{1,0} all-gather(%y), dimensions={0}
+        %rs.3 = (f32[16]{0}, f32[16]{0}) reduce-scatter(%a, %b), dims={0}
+        %cp = f32[8,8]{1,0} collective-permute(%z), source_target_pairs={}
+        %done = f32[8,8]{1,0} all-gather-done(%cp)
+        %other = f32[2,2]{1,0} add(%p, %q)
+    """)
+    out = hla.collective_bytes(hlo)
+    assert out["counts"]["all-reduce"] == 1
+    assert out["counts"]["all-gather"] == 1       # -done skipped
+    assert out["counts"]["reduce-scatter"] == 1
+    assert out["counts"]["collective-permute"] == 1
+    assert out["bytes"]["all-reduce"] == 256 * 4096 * 4
+    assert out["bytes"]["all-gather"] == 64 * 128 * 2
+    assert out["bytes"]["reduce-scatter"] == 2 * 16 * 4
+    assert out["total_bytes"] > 0
+
+
+def test_roofline_terms():
+    cost = {"flops": 197e12, "bytes accessed": 819e9}
+    coll = {"total_bytes": 50e9}
+    rl = hla.roofline(cost, coll, model_flops_per_device=98.5e12)
+    assert rl.compute_s == pytest.approx(1.0)
+    assert rl.memory_s == pytest.approx(1.0)
+    assert rl.collective_s == pytest.approx(1.0)
+    assert rl.useful_ratio == pytest.approx(0.5)
+
+
+SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses, json
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_smoke_config
+from repro.launch.mesh import make_mesh
+from repro.launch.steps import build_step
+from repro.models.config import ShapeConfig
+from repro.models import schema as sc, transformer as tf
+from repro.distributed.sharding import make_rules
+from repro.train import optimizer as opt
+from repro.train.checkpoint import CheckpointManager
+
+cfg = dataclasses.replace(get_smoke_config("qwen2p5_3b"),
+                          n_layers=2, d_model=64, d_ff=128, vocab=256)
+shape = ShapeConfig("t", "train", seq_len=32, global_batch=8, page_size=16)
+
+# --- sharded train step on a (2,4) mesh --------------------------------
+mesh = make_mesh((2, 4), ("data", "model"))
+built = build_step(cfg, shape, mesh, grad_accum=2)
+with mesh:
+    params = sc.init(tf.schema(cfg), jax.random.key(0))
+    opt_state = opt.init(params)
+    batch = {"tokens": jnp.zeros((8, 32), jnp.int32),
+             "labels": jnp.zeros((8, 32), jnp.int32)}
+    params = jax.device_put(params, built.in_shardings[0])
+    opt_state = jax.device_put(opt_state, built.in_shardings[1])
+    batch = jax.device_put(batch, built.in_shardings[2])
+    step = jax.jit(built.fn, in_shardings=built.in_shardings,
+                   out_shardings=built.out_shardings,
+                   donate_argnums=built.donate_argnums)
+    params, opt_state, metrics = step(params, opt_state, batch)
+    loss1 = float(metrics["loss"])
+    assert np.isfinite(loss1)
+
+    # --- elastic checkpoint: save on (2,4), restore on (4,2) ----------
+    ck = CheckpointManager("/tmp/repro_elastic_ck", keep=1)
+    ck.save(1, params)
+
+mesh2 = make_mesh((4, 2), ("data", "model"))
+rules2 = make_rules(cfg, mesh2, shape)
+sh2 = sc.shardings(tf.schema(cfg), rules2, mesh2)
+restored, _ = ck.restore(1, sc.abstract(tf.schema(cfg)), shardings=sh2)
+with mesh2:
+    a = jax.tree.leaves(params)[0]
+    b = jax.tree.leaves(restored)[0]
+    assert np.allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
+print(json.dumps({"ok": True, "loss": loss1,
+                  "devices": len(jax.devices())}))
+"""
+
+
+@pytest.mark.slow
+def test_multidevice_step_and_elastic_restore():
+    r = subprocess.run([sys.executable, "-c", SUBPROC], capture_output=True,
+                       text=True, timeout=600,
+                       env={**__import__("os").environ,
+                            "PYTHONPATH": "src"})
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["ok"] and out["devices"] == 8

@@ -1,0 +1,103 @@
+"""Pallas kernels: interpret-mode vs pure-jnp oracle, shape/dtype sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("B,N,KW", [(8, 16, 4), (128, 64, 8), (50, 8, 2),
+                                    (3, 80, 8)])
+def test_key_search_sweep(B, N, KW):
+    keys = RNG.integers(0, 60, (B, N, KW)).astype(np.uint32)
+    klens = RNG.integers(0, KW * 4 + 1, (B, N)).astype(np.int32)
+    valid = (RNG.random((B, N)) < 0.8).astype(np.int32)
+    q = RNG.integers(0, 60, (B, KW)).astype(np.uint32)
+    qlen = RNG.integers(1, KW * 4 + 1, (B,)).astype(np.int32)
+    a = ops.key_search(q, qlen, keys, klens, valid, backend="interpret",
+                       block_b=16)
+    b = ref.key_search_ref(*map(jnp.asarray, (q, qlen, keys, klens, valid)))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("B,N,L", [(4, 8, 4), (64, 64, 16), (33, 16, 8)])
+def test_leaf_merge_sweep(B, N, L):
+    nitems = RNG.integers(0, N + 1, (B,)).astype(np.int32)
+    nlog = RNG.integers(0, L + 1, (B,)).astype(np.int32)
+    backptr = RNG.integers(0, N + 1, (B, L)).astype(np.int32)
+    hints = np.stack([RNG.integers(0, j + 1, (B,)) for j in range(L)],
+                     axis=1).astype(np.int32)
+    pa, va = ops.leaf_merge(nitems, nlog, backptr, hints, node_cap=N,
+                            log_cap=L, backend="interpret", block_b=16)
+    pb, vb = ref.leaf_merge_ref(
+        *map(jnp.asarray, (nitems, nlog, backptr, hints)),
+        node_cap=N, log_cap=L)
+    np.testing.assert_array_equal(np.asarray(va), np.asarray(vb))
+    pa, pb = np.asarray(pa), np.asarray(pb)
+    for b in range(B):
+        nv = int(nitems[b] + nlog[b])
+        np.testing.assert_array_equal(pa[b, :nv], pb[b, :nv])
+
+
+@pytest.mark.parametrize("B,H,KVH,D,P,PPS,dtype", [
+    (2, 4, 2, 16, 8, 3, np.float32),
+    (4, 8, 8, 32, 16, 2, np.float32),
+    (2, 8, 2, 16, 8, 4, np.float32),
+])
+def test_paged_attention_sweep(B, H, KVH, D, P, PPS, dtype):
+    NP = 16
+    q = RNG.normal(size=(B, H, D)).astype(dtype)
+    kp = RNG.normal(size=(NP, P, KVH, D)).astype(dtype)
+    vp = RNG.normal(size=(NP, P, KVH, D)).astype(dtype)
+    bt = RNG.integers(0, NP, (B, PPS)).astype(np.int32)
+    sl = RNG.integers(1, P * PPS + 1, (B,)).astype(np.int32)
+    # at least one visible position (start < seq_len); an empty window is
+    # unreachable from the engine (a decoded token is always visible)
+    start = np.minimum(RNG.integers(0, 2, (B,)), sl - 1).astype(np.int32)
+    a = ops.paged_attention(q, kp, vp, bt, sl, start, backend="interpret",
+                            softcap=30.0)
+    b = ref.paged_attention_ref(*map(jnp.asarray, (q, kp, vp, bt, sl,
+                                                   start)), softcap=30.0)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-5,
+                               atol=3e-5)
+
+
+def test_paged_attention_bf16():
+    B, H, KVH, D, P, PPS, NP = 2, 4, 2, 16, 8, 2, 8
+    q = RNG.normal(size=(B, H, D)).astype(jnp.bfloat16)
+    kp = RNG.normal(size=(NP, P, KVH, D)).astype(jnp.bfloat16)
+    vp = RNG.normal(size=(NP, P, KVH, D)).astype(jnp.bfloat16)
+    bt = RNG.integers(0, NP, (B, PPS)).astype(np.int32)
+    sl = np.full((B,), P * PPS, np.int32)
+    a = ops.paged_attention(q, kp, vp, bt, sl, backend="interpret")
+    b = ref.paged_attention_ref(q, kp, vp, jnp.asarray(bt), jnp.asarray(sl))
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), rtol=3e-2,
+                               atol=3e-2)
+
+
+def test_kernels_match_store_search():
+    """The KSU kernel agrees with the live store's segment search."""
+    from repro.core import HoneycombConfig, HoneycombStore
+    from repro.core.keys import int_key, pack_keys
+    cfg = HoneycombConfig(node_cap=16, log_cap=4, n_shortcuts=4)
+    store = HoneycombStore(cfg, heap_capacity=64)
+    for i in range(16):
+        store.put(int_key(i * 2), b"v")
+    snap = store.export_snapshot()
+    phys = int(snap.pagetable[int(snap.root_lid)])
+    B = 8
+    queries = [int_key(2 * i + 1) for i in range(B)]   # between keys
+    lanes, lens = pack_keys(queries, cfg.key_words)
+    keys = np.broadcast_to(np.asarray(snap.skeys)[phys][None],
+                           (B, cfg.node_cap, cfg.key_words)).copy()
+    klens = np.broadcast_to(np.asarray(snap.skeylen)[phys][None],
+                            (B, cfg.node_cap)).copy()
+    valid = (np.arange(cfg.node_cap)[None]
+             < int(snap.nitems[phys])).astype(np.int32)
+    valid = np.broadcast_to(valid, (B, cfg.node_cap)).copy()
+    idx = ops.key_search(lanes, lens, keys, klens, valid,
+                         backend="interpret", block_b=8)
+    np.testing.assert_array_equal(np.asarray(idx), np.arange(B))

@@ -1,0 +1,53 @@
+"""Key packing/comparison: host numpy vs jax vs python bytes semantics."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.keys import (int_key, jax_key_cmp, key_cmp, pack_key,
+                             pack_keys, unpack_key)
+
+KW = 4
+
+
+def ref_cmp(a: bytes, b: bytes) -> int:
+    return (a > b) - (a < b)
+
+
+@given(st.binary(max_size=KW * 4), st.binary(max_size=KW * 4))
+@settings(max_examples=200, deadline=None)
+def test_key_cmp_matches_bytes(a, b):
+    la, lb = pack_key(a, KW), pack_key(b, KW)
+    assert key_cmp(la, len(a), lb, len(b)) == ref_cmp(a, b)
+
+
+@given(st.binary(max_size=KW * 4), st.binary(max_size=KW * 4))
+@settings(max_examples=100, deadline=None)
+def test_jax_cmp_matches_host(a, b):
+    la, lb = pack_key(a, KW), pack_key(b, KW)
+    j = int(jax_key_cmp(jnp.asarray(la), jnp.int32(len(a)),
+                        jnp.asarray(lb), jnp.int32(len(b))))
+    assert j == key_cmp(la, len(a), lb, len(b))
+
+
+@given(st.binary(max_size=KW * 4))
+@settings(max_examples=50, deadline=None)
+def test_pack_roundtrip(key):
+    lanes = pack_key(key, KW)
+    assert unpack_key(lanes, len(key)) == key
+
+
+def test_int_key_orders_numerically():
+    ks = [int_key(i) for i in (0, 1, 255, 256, 65535, 2**31)]
+    assert ks == sorted(ks)
+
+
+def test_pack_keys_batch():
+    lanes, lens = pack_keys([b"a", b"bc", b""], KW)
+    assert lanes.shape == (3, KW)
+    assert list(lens) == [1, 2, 0]
+
+
+def test_oversize_key_raises():
+    with pytest.raises(ValueError):
+        pack_key(b"x" * (KW * 4 + 1), KW)

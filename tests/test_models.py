@@ -1,0 +1,166 @@
+"""Model zoo: per-arch smoke tests (reduced configs, one forward/train step
+on CPU, output shapes + no NaNs) and layer-level equivalences."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import layers as ll
+from repro.models import mamba2 as mm
+from repro.models import moe as me
+from repro.models import schema as sc
+from repro.models import transformer as tf
+
+B, S = 2, 32
+
+
+def make_batch(cfg):
+    batch = {"labels": jnp.zeros((B, S), jnp.int32)}
+    if cfg.embeds_in:
+        batch["embeds"] = jnp.full((B, S, cfg.d_model), 0.01, jnp.bfloat16)
+    else:
+        batch["tokens"] = jnp.zeros((B, S), jnp.int32)
+    if cfg.n_enc_layers:
+        batch["enc_embeds"] = jnp.full((B, S // 4, cfg.d_model), 0.01,
+                                       jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_backward(arch):
+    cfg = get_smoke_config(arch)
+    params = sc.init(tf.schema(cfg), jax.random.key(0))
+    batch = make_batch(cfg)
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda p: tf.lm_loss(p, cfg, batch)))(params)
+    assert jnp.isfinite(loss), arch
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert jnp.isfinite(gnorm), arch
+    logits = tf.forward(params, cfg, tokens=batch.get("tokens"),
+                        embeds=batch.get("embeds"),
+                        enc_out=(tf.encode(params, cfg, batch["enc_embeds"])
+                                 if cfg.n_enc_layers else None),
+                        remat=False)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_schema_consistency(arch):
+    """Full (assigned) configs: schema instantiates abstractly, parameter
+    count sane, pattern divides depth.  No allocation happens here."""
+    cfg = get_config(arch)
+    tree = tf.schema(cfg)
+    abstract = sc.abstract(tree)
+    n = sc.n_params(tree)
+    assert n > 100e6, (arch, n)
+    assert cfg.n_layers % len(cfg.pattern) == 0
+    leaves = jax.tree.leaves(abstract)
+    assert all(hasattr(l, "shape") for l in leaves)
+    if cfg.vocab:
+        assert cfg.vocab % 16 == 0, "vocab must shard on the model axis"
+
+
+def test_ssd_chunked_equals_recurrence():
+    cfg = get_smoke_config("mamba2_1p3b")
+    rng = np.random.default_rng(0)
+    b, s = 2, 16
+    H, P, N = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xh = jnp.asarray(rng.normal(size=(b, s, H, P)), jnp.float32)
+    dt = jax.nn.softplus(jnp.asarray(rng.normal(size=(b, s, H))))
+    A = -jnp.exp(jnp.asarray(rng.normal(size=(H,)), jnp.float32))
+    Bm = jnp.asarray(rng.normal(size=(b, s, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(b, s, N)), jnp.float32)
+    y4, h4 = mm._ssd_chunked(xh, dt, A, Bm, Cm, chunk=4)
+    y16, h16 = mm._ssd_chunked(xh, dt, A, Bm, Cm, chunk=16)
+    h = jnp.zeros((b, H, P, N))
+    ys = []
+    for t in range(s):
+        dA = jnp.exp(dt[:, t] * A[None, :])
+        h = h * dA[:, :, None, None] + jnp.einsum(
+            "bn,bh,bhp->bhpn", Bm[:, t], dt[:, t], xh[:, t])
+        ys.append(jnp.einsum("bn,bhpn->bhp", Cm[:, t], h))
+    y_ref = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y4), np.asarray(y_ref), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(y16), np.asarray(y_ref), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(h4), np.asarray(h), atol=2e-5)
+
+
+def test_mamba_prefill_state_matches_decode_steps():
+    """Running prefill then decoding == decoding token by token."""
+    cfg = get_smoke_config("mamba2_1p3b")
+    p = sc.init(mm.mamba_schema(cfg), jax.random.key(1))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1, 8, cfg.d_model)) * 0.1,
+                    jnp.float32)
+    _, st_pref = mm.mamba_block(p, x, cfg, return_state=True)
+    st = mm.init_state(cfg, 1)
+    for t in range(8):
+        _, st = mm.mamba_decode(p, x[:, t: t + 1], st, cfg)
+    np.testing.assert_allclose(np.asarray(st_pref.ssm), np.asarray(st.ssm),
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_pref.conv),
+                               np.asarray(st.conv), atol=2e-4)
+
+
+def test_chunked_attention_equals_dense():
+    cfg = get_smoke_config("qwen2p5_3b")
+    p = sc.init(ll.attention_schema(cfg), jax.random.key(2))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 64, cfg.d_model)) * 0.1,
+                    jnp.bfloat16)
+    dense, _ = ll.attention(p, x, cfg, local=False, q_chunk=64)
+    chunked, _ = ll.attention(p, x, cfg, local=False, q_chunk=16)
+    np.testing.assert_allclose(np.asarray(dense, np.float32),
+                               np.asarray(chunked, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_local_window_mask():
+    cfg = dataclasses.replace(get_smoke_config("gemma2_27b"), window=8)
+    p = sc.init(ll.attention_schema(cfg), jax.random.key(3))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1, 32, cfg.d_model)) * 0.1,
+                    jnp.bfloat16)
+    local, _ = ll.attention(p, x, cfg, local=True)
+    # perturbing a token beyond the window must not change the output
+    x2 = x.at[:, 0].add(1.0)
+    local2, _ = ll.attention(p, x2, cfg, local=True)
+    np.testing.assert_allclose(np.asarray(local[:, 20:], np.float32),
+                               np.asarray(local2[:, 20:], np.float32),
+                               atol=1e-2)
+    glob, _ = ll.attention(p, x2, cfg, local=False)
+    assert not np.allclose(np.asarray(glob[:, 20:], np.float32),
+                           np.asarray(local2[:, 20:], np.float32),
+                           atol=1e-3)
+
+
+def test_moe_ragged_equals_dense():
+    cfg = get_smoke_config("olmoe_1b_7b")
+    p = sc.init(me.moe_schema(cfg), jax.random.key(4))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 16, cfg.d_model)) * 0.1,
+                    jnp.float32)
+    yd = me.moe_dense(p, x, cfg)
+    yr = me.moe_ragged(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(yd), np.asarray(yr), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_param_counts_match_published():
+    expect = {"mixtral_8x22b": (140e9, 142e9), "olmoe_1b_7b": (6.5e9, 7.3e9),
+              "gemma2_27b": (27e9, 29e9), "jamba_v0p1_52b": (50e9, 53e9),
+              "qwen2p5_3b": (3.1e9, 3.6e9), "mamba2_1p3b": (1.3e9, 1.5e9)}
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_moe_active_params():
+    cfg = get_config("mixtral_8x22b")
+    na = cfg.active_param_count()
+    assert 38e9 <= na <= 41e9, na

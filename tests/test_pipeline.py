@@ -1,0 +1,50 @@
+"""Pipeline parallelism: the staged schedule equals sequential layer
+application (8 CPU devices, subprocess)."""
+import json
+import subprocess
+import sys
+
+import pytest
+
+SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.mesh import make_mesh
+from repro.distributed.pipeline import pipeline_apply, bubble_fraction
+
+rng = np.random.default_rng(0)
+S, M, mb, d = 4, 6, 2, 16          # 4 stages, 6 microbatches
+mesh = make_mesh((4, 2), ("stage", "model"))
+w = jnp.asarray(rng.normal(size=(S, d, d)) * 0.3, jnp.float32)
+x = jnp.asarray(rng.normal(size=(M, mb, d)), jnp.float32)
+
+def stage_fn(p, x):
+    return jnp.tanh(x @ p)
+
+with mesh:
+    wd = jax.device_put(w, NamedSharding(mesh, P("stage")))
+    y = jax.jit(lambda w, x: pipeline_apply(
+        stage_fn, w, x, mesh=mesh, stage_axis="stage"))(wd, x)
+
+# sequential reference
+ref = x
+for s in range(S):
+    ref = jnp.tanh(ref @ w[s])
+np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=2e-5,
+                           atol=2e-5)
+assert abs(bubble_fraction(6, 4) - 3/9) < 1e-9
+print(json.dumps({"ok": True}))
+"""
+
+
+@pytest.mark.slow
+def test_pipeline_matches_sequential():
+    r = subprocess.run([sys.executable, "-c", SUBPROC], capture_output=True,
+                       text=True, timeout=600,
+                       env={**__import__("os").environ,
+                            "PYTHONPATH": "src"})
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert json.loads(r.stdout.strip().splitlines()[-1])["ok"]

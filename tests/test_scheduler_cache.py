@@ -1,0 +1,89 @@
+"""Out-of-order scheduler + interior-node cache / load balancer."""
+import numpy as np
+
+from repro.core import HoneycombConfig, HoneycombStore
+from repro.core.cache import InteriorCache
+from repro.core.keys import int_key
+from repro.core.scheduler import OutOfOrderScheduler
+
+
+def test_scheduler_in_order_delivery():
+    store = HoneycombStore(HoneycombConfig(node_cap=16, log_cap=4,
+                                           n_shortcuts=4))
+    for i in range(100):
+        store.put(int_key(i), b"v%d" % i)
+    sched = OutOfOrderScheduler(batch_size=8)
+    rids = {}
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        k = int(rng.integers(0, 100))
+        rids[sched.submit("get", int_key(k))] = k
+    for _ in range(10):
+        a = int(rng.integers(0, 90))
+        rids[sched.submit("scan", int_key(a), int_key(a + 3),
+                          expected_items=4)] = (a, a + 3)
+    out = sched.run(store)
+    assert set(out) == set(rids)
+    for rid, spec in rids.items():
+        if isinstance(spec, int):
+            assert out[rid] == b"v%d" % spec
+        else:
+            assert out[rid] == store.tree.scan(int_key(spec[0]),
+                                               int_key(spec[1]))
+    assert sched.dispatched_requests == 30
+
+
+def test_scheduler_cost_bucketing():
+    sched = OutOfOrderScheduler(batch_size=4, cost_classes=(1, 16))
+    for i in range(6):
+        sched.submit("scan", b"a", b"b", expected_items=1)
+    for i in range(3):
+        sched.submit("scan", b"a", b"b", expected_items=10)
+    batches = list(sched.ready_batches(flush=True))
+    sizes = sorted(len(b) for _, b in batches)
+    assert sizes == [2, 3, 4]          # same-cost requests batch together
+
+
+def test_cache_hit_invalidate():
+    cfg = HoneycombConfig(cache_slots=16, cache_ways=4, load_balance=False)
+    c = InteriorCache(cfg)
+    assert not c.lookup(5, phys=100)     # miss fills
+    assert c.lookup(5, phys=100)         # hit
+    assert not c.lookup(5, phys=200)     # phys changed (remap) -> NAT miss
+    assert c.stats.invalidations == 1
+    c.invalidate(5)
+
+
+def test_load_balancer_routes_to_both_paths():
+    cfg = HoneycombConfig(cache_slots=64, load_balance=True,
+                          lb_fast_fraction=0.6)
+    c = InteriorCache(cfg)
+    for lid in range(32):
+        c.lookup(lid, lid)               # warm
+    for _ in range(200):
+        for lid in range(32):
+            c.route(lid, lid, nbytes=1024)
+    assert c.stats.fast_path_reads > 0
+    assert c.stats.slow_path_reads > 0   # hits deliberately sent slow
+    frac = c.stats.fast_path_reads / (c.stats.fast_path_reads
+                                      + c.stats.slow_path_reads)
+    assert 0.4 < frac < 0.8
+
+
+def test_no_lb_keeps_hits_fast():
+    cfg = HoneycombConfig(cache_slots=64, load_balance=False)
+    c = InteriorCache(cfg)
+    for lid in range(8):
+        c.lookup(lid, lid)
+    for _ in range(50):
+        for lid in range(8):
+            c.route(lid, lid, nbytes=512)
+    assert c.stats.slow_path_reads == 0
+
+
+def test_inflight_telemetry_balancing():
+    cfg = HoneycombConfig(cache_slots=64, load_balance=True)
+    c = InteriorCache(cfg)
+    c.lookup(1, 1)
+    assert c.route(1, 1, 64, fast_inflight=100, slow_inflight=0) == "slow"
+    assert c.route(1, 1, 64, fast_inflight=0, slow_inflight=100) == "fast"
