@@ -64,13 +64,26 @@ def build_stores(n_items: int = 8192, val_bytes: int = 16,
     return hc, cp
 
 
+def sync_traffic(store) -> dict:
+    """Snapshot of a Honeycomb store's host->device sync meters (delta-sync
+    subsystem) for paper-comparable traffic reporting."""
+    s = store.sync_stats
+    return {"bytes_synced": s.bytes_synced, "snapshots": s.snapshots,
+            "full_syncs": s.full_syncs, "delta_syncs": s.delta_syncs,
+            "pagetable_commands": s.pagetable_commands,
+            "read_version_updates": s.read_version_updates,
+            "delta_fraction": s.delta_fraction}
+
+
 def run_mixed(store, sampler, *, n_ops: int, read_frac: float,
               n_items: int, scan_items: int = 0, batch: int = 256,
               is_honeycomb: bool = True, val: bytes = b"x" * 16,
               seed: int = 1) -> dict:
     """Timed mixed workload.  Reads run through the batched accelerator
     path for Honeycomb and per-op for the CPU baseline (that asymmetry IS
-    the systems comparison).  Returns ops/s and latency stats."""
+    the systems comparison).  Returns ops/s, latency stats and (for
+    Honeycomb) the sync traffic the workload generated."""
+    start_sync = sync_traffic(store) if is_honeycomb else None
     rng = np.random.default_rng(seed)
     ops = rng.random(n_ops) < read_frac
     keys = sampler(n_ops)
@@ -96,7 +109,15 @@ def run_mixed(store, sampler, *, n_ops: int, read_frac: float,
             done += 1
             i += 1
     dt = time.perf_counter() - t0
-    return {"ops_per_s": done / dt, "seconds": dt, "ops": done}
+    out = {"ops_per_s": done / dt, "seconds": dt, "ops": done}
+    if is_honeycomb:
+        end = sync_traffic(store)
+        out["sync"] = {k: end[k] - start_sync[k]
+                       for k in ("bytes_synced", "snapshots", "full_syncs",
+                                 "delta_syncs", "pagetable_commands",
+                                 "read_version_updates")}
+        out["sync"]["bytes_per_op"] = out["sync"]["bytes_synced"] / max(done, 1)
+    return out
 
 
 def bytes_model_honeycomb(cfg: HoneycombConfig, height: int) -> int:

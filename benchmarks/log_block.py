@@ -1,6 +1,12 @@
 """Fig. 17: log-block size sweep.  Bigger log blocks help inserts (fewer
 merges => fewer page-table syncs) and hurt scans (more unsorted bytes per
-leaf read) — the paper picks 512 B; here the analogue knob is log_cap."""
+leaf read) — the paper picks 512 B; here the analogue knob is log_cap.
+
+Also reports the delta-vs-full sync-traffic curve: after a resident snapshot
+exists, a batch of W writes delta-syncs O(W) bytes where a wholesale
+republish moves the entire store — the log block plus batched page-table
+commands are exactly what make the delta small (the paper's PCIe
+amortization argument, now measurable end to end)."""
 from __future__ import annotations
 
 import time
@@ -10,6 +16,29 @@ import numpy as np
 from repro.core import HoneycombConfig, HoneycombStore
 from repro.core.keys import int_key
 from .common import emit, uniform_sampler
+
+WRITE_BATCHES = (16, 64, 256)
+
+
+def sync_traffic_curve(st: HoneycombStore, n_items: int) -> dict:
+    """Delta vs full host->device bytes for growing write batches."""
+    st.export_snapshot()                      # make the snapshot resident
+    curve = {}
+    rng = np.random.default_rng(23)
+    for w in WRITE_BATCHES:
+        for k in rng.integers(0, n_items, w):
+            st.update(int_key(int(k)), b"u" * 16)
+        b0 = st.sync_stats.bytes_synced
+        st.export_snapshot()
+        delta_bytes = st.sync_stats.bytes_synced - b0
+        delta_fraction = st.sync_stats.delta_fraction
+        b1 = st.sync_stats.bytes_synced
+        st.export_snapshot(full=True)
+        full_bytes = st.sync_stats.bytes_synced - b1
+        curve[w] = {"delta_bytes": delta_bytes, "full_bytes": full_bytes,
+                    "ratio": delta_bytes / full_bytes,
+                    "delta_fraction": delta_fraction}
+    return curve
 
 
 def run(n_items: int = 2048, n_ops: int = 1024) -> dict:
@@ -35,10 +64,15 @@ def run(n_items: int = 2048, n_ops: int = 1024) -> dict:
             ks2 = [int_key(int(k)) for k in sampler(min(256, n_ops - i))]
             st.scan_batch([(k, k) for k in ks2])
         sc = n_ops / (time.perf_counter() - t0)
+        curve = sync_traffic_curve(st, n_items)
         results[log_cap] = {"insert_ops_s": ins, "scan_ops_s": sc,
-                            "pt_syncs": syncs}
+                            "pt_syncs": syncs, "sync_traffic": curve}
         emit(f"logcap_{log_cap}", 1e6 / ins,
              f"insert={ins:.0f}/s scan={sc:.0f}/s syncs={syncs}")
+        for w, c in curve.items():
+            emit(f"logcap_{log_cap}_sync_w{w}", c["delta_bytes"],
+                 f"delta={c['delta_bytes']}B full={c['full_bytes']}B "
+                 f"ratio={c['ratio']:.4f}")
     return results
 
 

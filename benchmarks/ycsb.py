@@ -32,11 +32,16 @@ def run(n_items: int = 4096, n_ops: int = 2048) -> dict:
             h, c = r_h["ops_per_s"], r_c["ops_per_s"]
             eff_h = h / TDP_HONEYCOMB_W
             eff_c = c / TDP_BASELINE_W
+            sync = r_h["sync"]
             results[f"{wl}/{dist}"] = {
                 "honeycomb_ops_s": h, "baseline_ops_s": c,
-                "speedup": h / c, "eff_ratio": eff_h / eff_c}
+                "speedup": h / c, "eff_ratio": eff_h / eff_c,
+                "sync": sync}
             emit(f"ycsb_{wl}_{dist}", 1e6 / h,
-                 f"speedup={h / c:.2f}x eff={eff_h / eff_c:.2f}x")
+                 f"speedup={h / c:.2f}x eff={eff_h / eff_c:.2f}x "
+                 f"sync_B/op={sync['bytes_per_op']:.0f} "
+                 f"deltas={sync['delta_syncs']}/{sync['snapshots']} "
+                 f"pt_cmds={sync['pagetable_commands']}")
     return results
 
 

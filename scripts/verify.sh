@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate (fast, deterministic).
+#
+#   scripts/verify.sh          # fast gate: everything not marked slow
+#   scripts/verify.sh --all    # full suite, including slow tests
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--all" ]]; then
+    exec python -m pytest -x -q
+fi
+exec python -m pytest -x -q -m "not slow"

@@ -1,0 +1,22 @@
+"""Version compatibility shims for JAX API drift.
+
+The repo targets current JAX but must run on older installs (this container
+ships 0.4.x): ``jax.shard_map``/``check_vma`` moved out of
+``jax.experimental.shard_map``/``check_rep`` only in later releases, and
+``jax.sharding.AxisType`` does not exist before the explicit-sharding work.
+Each shim prefers the new API and degrades to the equivalent old one.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` with the old experimental fallback (where the
+    replication-check kwarg is spelled ``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

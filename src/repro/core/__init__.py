@@ -1,15 +1,17 @@
 """Honeycomb core: the paper's contribution as a composable JAX module."""
 from .config import HoneycombConfig, DEFAULT_CONFIG
 from .btree import HoneycombTree
-from .store import HoneycombStore
-from .read_path import (TreeSnapshot, ScanResult, GetResult, batched_get,
-                        batched_scan, descend, log_sort_positions)
+from .store import HoneycombStore, SyncStats
+from .read_path import (TreeSnapshot, SnapshotDelta, ScanResult, GetResult,
+                        apply_snapshot_delta, batched_get, batched_scan,
+                        descend, log_sort_positions)
 from .scheduler import OutOfOrderScheduler, Request
 from .cache import InteriorCache
 
 __all__ = [
     "HoneycombConfig", "DEFAULT_CONFIG", "HoneycombTree", "HoneycombStore",
-    "TreeSnapshot", "ScanResult", "GetResult", "batched_get", "batched_scan",
+    "TreeSnapshot", "SnapshotDelta", "ScanResult", "GetResult",
+    "apply_snapshot_delta", "batched_get", "batched_scan",
     "descend", "log_sort_positions", "OutOfOrderScheduler", "Request",
-    "InteriorCache",
+    "InteriorCache", "SyncStats",
 ]

@@ -364,6 +364,7 @@ class HoneycombTree:
         # publish: the paper packs (size | seqno | lock) into one word so the
         # count bump, seqno bump and unlock are a single store
         h.nlog[phys] = j + 1
+        h.mark_dirty(phys)         # in-place append -> delta sync this row
         h.unlock_bump(phys)
         self.versions.release(wv)
 
@@ -597,6 +598,7 @@ class HoneycombTree:
             self.heap.lsib[phys] = lsib
         if rsib is not None:
             self.heap.rsib[phys] = rsib
+        self.heap.mark_dirty(phys)
         self.heap.unlock_bump(phys)
 
     # -------------------------------------------------------- underflow merge

@@ -52,11 +52,27 @@ class HoneycombConfig:
     # --- value overflow heap -----------------------------------------------
     overflow_words: int = 128   # slot size of the out-of-node value heap
 
+    # --- host->device sync (delta snapshots, paper Sections 3-4) ------------
+    # "on_read": sync lazily before a device batch (default, paper-like);
+    # "every_k": sync after every sync_every_k writes (batched sync);
+    # "explicit": only export_snapshot()/scheduler.run() sync — device reads
+    #             may observe a stale-but-consistent snapshot.
+    sync_policy: str = "on_read"
+    sync_every_k: int = 64
+    # dirty-row fraction above which a delta sync would move more bytes than
+    # a wholesale republish is worth; fall back to a full publish
+    delta_full_threshold: float = 0.5
+
     def __post_init__(self):
         assert self.node_cap % self.n_shortcuts == 0, (
             "segments must tile the sorted block")
         assert self.log_cap <= 255, "order hints are 1 byte (paper Fig. 7)"
         assert self.node_cap <= 2 ** 15, "back pointers are 2 bytes"
+        assert self.sync_policy in ("on_read", "every_k", "explicit"), (
+            f"unknown sync_policy {self.sync_policy!r}")
+        assert 0.0 < self.delta_full_threshold <= 1.0, (
+            "delta_full_threshold is a dirty fraction in (0, 1]")
+        assert self.sync_every_k >= 1, "sync_every_k must be >= 1"
 
     @property
     def segment_items(self) -> int:

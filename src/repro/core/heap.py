@@ -39,6 +39,12 @@ class NodeHeap:
         self.cfg = cfg
         self.capacity = 0
         self._free: list[int] = []
+        # rows whose packed arrays changed since the last device sync — the
+        # unit of host->accelerator delta transfer (paper: one node buffer)
+        self.dirty: set[int] = set()
+        # bumped when the arrays are reallocated (growth): resident device
+        # snapshots have the old shapes and need a full republish
+        self.generation = 0
         self._alloc_arrays(capacity)
 
     # -- storage -------------------------------------------------------------
@@ -81,6 +87,7 @@ class NodeHeap:
 
         self._free.extend(range(capacity - 1, old - 1, -1))
         self.capacity = capacity
+        self.generation += 1
 
     ARRAY_FIELDS = (
         "ntype nitems version oldptr left_child lsib rsib skeys skeylen "
@@ -92,11 +99,19 @@ class NodeHeap:
     def alloc(self) -> int:
         if not self._free:
             self._alloc_arrays(self.capacity * 2)
-        return self._free.pop()
+        slot = self._free.pop()
+        self.dirty.add(slot)       # caller fills the buffer next
+        return slot
 
     def free(self, slot: int):
         self._wipe(slot)
+        self.dirty.add(slot)
         self._free.append(slot)
+
+    def mark_dirty(self, slot: int):
+        """Record an in-place mutation of a published buffer (log append,
+        sibling relink) for the next delta sync."""
+        self.dirty.add(slot)
 
     def _wipe(self, s: int):
         self.ntype[s] = 0

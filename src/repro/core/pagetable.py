@@ -22,6 +22,9 @@ class PageTable:
         self.pending: dict[int, int] = {}   # LID -> phys, not yet on device
         self.sync_commands = 0              # paper: PCIe page-table updates
         self.device_image = self.host.copy()
+        # bumped on growth: a resident device table has the old shape and
+        # must be republished in full
+        self.generation = 0
 
     def _grow(self):
         cap = len(self.host)
@@ -29,6 +32,7 @@ class PageTable:
         self.device_image = np.concatenate(
             [self.device_image, np.full(cap, NULL, np.int32)])
         self._free.extend(range(2 * cap - 1, cap - 1, -1))
+        self.generation += 1
 
     def alloc_lid(self, phys: int) -> int:
         if not self._free:
@@ -54,12 +58,20 @@ class PageTable:
     def lookup(self, lid: int) -> int:
         return int(self.host[lid])
 
+    def take_pending(self) -> tuple[np.ndarray, np.ndarray]:
+        """Drain the pending update queue as (lids, phys) command arrays —
+        the batched PCIe page-table commands of one sync — applying them to
+        the device image."""
+        lids = np.fromiter(self.pending.keys(), np.int32, len(self.pending))
+        phys = np.fromiter(self.pending.values(), np.int32, len(self.pending))
+        self.device_image[lids] = phys
+        self.pending.clear()
+        return lids, phys
+
     def flush_to_device(self) -> np.ndarray:
         """Apply pending updates to the accelerator image (the 'PCIe
         commands' batch) and return it."""
-        for lid, phys in self.pending.items():
-            self.device_image[lid] = phys
-        self.pending.clear()
+        self.take_pending()
         return self.device_image
 
     @property

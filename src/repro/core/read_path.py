@@ -66,6 +66,72 @@ class TreeSnapshot(NamedTuple):
     read_version: jax.Array  # i32 []
 
 
+# per-node-row snapshot fields, in TreeSnapshot order (everything except the
+# page table and the two scalars, which delta-sync separately)
+NODE_FIELDS = (
+    "ntype", "nitems", "version", "oldptr", "left_child", "lsib", "rsib",
+    "skeys", "skeylen", "svals", "svallen", "n_shortcuts", "sc_keys",
+    "sc_keylen", "sc_pos", "nlog", "log_keys", "log_keylen", "log_vals",
+    "log_vallen", "log_op", "log_backptr", "log_hint", "log_vdelta")
+
+
+class SnapshotDelta(NamedTuple):
+    """One host->device sync's worth of changed state (paper Sections 3-4:
+    node-buffer DMAs + batched page-table commands + read-version update).
+
+    ``rows`` are the dirty physical slots; each per-node field carries the
+    new row contents ([D, ...] leading dim).  Rows may repeat (padding to a
+    bucketed size keeps the jit cache small); repeated rows carry identical
+    data, so the scatter is idempotent.
+    """
+    rows: jax.Array          # i32 [D] dirty physical slots
+    ntype: jax.Array         # i32 [D]
+    nitems: jax.Array        # i32 [D]
+    version: jax.Array       # i32 [D]
+    oldptr: jax.Array        # i32 [D]
+    left_child: jax.Array    # i32 [D]
+    lsib: jax.Array          # i32 [D]
+    rsib: jax.Array          # i32 [D]
+    skeys: jax.Array         # u32 [D, N, KW]
+    skeylen: jax.Array       # i32 [D, N]
+    svals: jax.Array         # u32 [D, N, VW]
+    svallen: jax.Array       # i32 [D, N]
+    n_shortcuts: jax.Array   # i32 [D]
+    sc_keys: jax.Array       # u32 [D, NSC, KW]
+    sc_keylen: jax.Array     # i32 [D, NSC]
+    sc_pos: jax.Array        # i32 [D, NSC]
+    nlog: jax.Array          # i32 [D]
+    log_keys: jax.Array      # u32 [D, L, KW]
+    log_keylen: jax.Array    # i32 [D, L]
+    log_vals: jax.Array      # u32 [D, L, VW]
+    log_vallen: jax.Array    # i32 [D, L]
+    log_op: jax.Array        # i32 [D, L]
+    log_backptr: jax.Array   # i32 [D, L]
+    log_hint: jax.Array      # i32 [D, L]
+    log_vdelta: jax.Array    # i32 [D, L]
+    pt_lids: jax.Array       # i32 [P] page-table command targets
+    pt_phys: jax.Array       # i32 [P] new mappings (may repeat, identical)
+    root_lid: jax.Array      # i32 []
+    read_version: jax.Array  # i32 []
+
+
+def apply_snapshot_delta(snap: TreeSnapshot,
+                         delta: SnapshotDelta) -> TreeSnapshot:
+    """Scatter one sync's dirty rows + page-table commands into a resident
+    device snapshot, yielding the next snapshot.
+
+    Functional on purpose: the input snapshot's buffers are never donated,
+    so old snapshots held by in-flight batches keep answering at their read
+    version (wait-free MVCC).  This jnp implementation is the oracle XLA:CPU
+    lowers; ``repro.kernels.delta_scatter`` is the Pallas/TPU variant.
+    """
+    upd = {f: getattr(snap, f).at[delta.rows].set(getattr(delta, f))
+           for f in NODE_FIELDS}
+    return snap._replace(
+        pagetable=snap.pagetable.at[delta.pt_lids].set(delta.pt_phys),
+        root_lid=delta.root_lid, read_version=delta.read_version, **upd)
+
+
 class ScanResult(NamedTuple):
     count: jax.Array       # i32 [B] items emitted
     keys: jax.Array        # u32 [B, M, KW]

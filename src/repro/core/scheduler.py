@@ -7,35 +7,47 @@ expected work (scan width, key size) are bucketed together so a vectorized
 step is not held hostage by one expensive lane, and responses are re-ordered
 back to arrival order on completion — out-of-order execution with in-order
 delivery, exactly the accelerator's contract.
+
+Writes are first-class requests too: ``run()`` applies every pending write
+host-side, in submission order, then performs ONE host->device sync (the
+delta snapshot export) before dispatching the read batches — the paper's
+batched synchronization (Sections 3-4: many writes amortize one set of PCIe
+page-table/read-version commands).
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict
-from typing import Any, Callable, Iterable, Sequence
+from typing import Any, Iterable, Sequence
+
+WRITE_KINDS = ("put", "update", "delete")
 
 
 @dataclasses.dataclass
 class Request:
     rid: int
-    kind: str                  # "get" | "scan"
+    kind: str                  # "get" | "scan" | "put" | "update" | "delete"
     key: bytes = b""
     hi: bytes = b""
+    value: bytes = b""
     expected_items: int = 1
 
 
 class OutOfOrderScheduler:
-    """Buckets requests by cost class, dispatches dense batches, reassembles
-    responses in arrival order."""
+    """Buckets read requests by cost class, queues writes in order,
+    dispatches dense batches, reassembles responses in arrival order."""
 
     def __init__(self, batch_size: int = 256,
                  cost_classes: Sequence[int] = (1, 4, 16, 64)):
         self.batch_size = batch_size
         self.cost_classes = tuple(sorted(cost_classes))
         self._buckets: dict[tuple[str, int], list[Request]] = defaultdict(list)
+        self._writes: list[Request] = []
         self._next_rid = 0
         self.dispatched_batches = 0
         self.dispatched_requests = 0
+        self.applied_writes = 0
+        self.syncs = 0             # host->device syncs run() triggered
 
     def _cost_class(self, r: Request) -> int:
         for c in self.cost_classes:
@@ -44,16 +56,20 @@ class OutOfOrderScheduler:
         return self.cost_classes[-1]
 
     def submit(self, kind: str, key: bytes, hi: bytes = b"",
-               expected_items: int = 1) -> int:
+               value: bytes = b"", expected_items: int = 1) -> int:
         rid = self._next_rid
         self._next_rid += 1
-        r = Request(rid, kind, key, hi, expected_items)
-        self._buckets[(kind, self._cost_class(r))].append(r)
+        r = Request(rid, kind, key, hi, value, expected_items)
+        if kind in WRITE_KINDS:
+            self._writes.append(r)      # writes keep submission order
+        else:
+            self._buckets[(kind, self._cost_class(r))].append(r)
         return rid
 
     def ready_batches(self, flush: bool = False
                       ) -> Iterable[tuple[str, list[Request]]]:
-        """Full batches (or all remaining when flushing), densest first."""
+        """Full read batches (or all remaining when flushing), densest
+        first."""
         for (kind, _), reqs in sorted(self._buckets.items(),
                                       key=lambda kv: -len(kv[1])):
             while len(reqs) >= self.batch_size or (flush and reqs):
@@ -61,10 +77,34 @@ class OutOfOrderScheduler:
                 del reqs[: self.batch_size]
                 yield kind, batch
 
-    def run(self, store, flush: bool = True) -> dict[int, Any]:
-        """Drive all pending requests through the store's batched paths and
-        return {rid: response} with in-order semantics per request id."""
+    def _apply_writes(self, store) -> dict[int, Any]:
+        """Host-side write phase: every queued write in submission order,
+        no device sync in between (that is the whole point) — the store's
+        own "every_k" policy is deferred for the duration of the burst."""
         out: dict[int, Any] = {}
+        with store.deferred_sync():
+            for r in self._writes:
+                if r.kind == "put":
+                    store.put(r.key, r.value)
+                elif r.kind == "update":
+                    store.update(r.key, r.value)
+                else:
+                    store.delete(r.key)
+                out[r.rid] = None
+        self.applied_writes += len(self._writes)
+        self._writes.clear()
+        return out
+
+    def run(self, store, flush: bool = True) -> dict[int, Any]:
+        """Drive all pending requests through the store: writes first (in
+        order), one batched sync, then the batched read paths.  Returns
+        {rid: response} with in-order semantics per request id."""
+        out = self._apply_writes(store)
+        if out:
+            # ONE sync covers the whole write burst — the paper's batched
+            # PCIe synchronization (delta export scales with the burst)
+            store.export_snapshot()
+            self.syncs += 1
         for (kind, _), reqs in list(self._buckets.items()):
             while reqs and (flush or len(reqs) >= self.batch_size):
                 batch = reqs[: self.batch_size]

@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
+
 F32 = jnp.float32
 NEG_INF = -1e30
 
@@ -91,7 +93,7 @@ def paged_attention_local(q, k_pages, v_pages, block_tables, seq_lens,
         o = jnp.einsum("bkgs,bskd->bkgd", probs, v.astype(F32))
         return o, kp, vp
 
-    out, kp, vp = jax.shard_map(
+    out, kp, vp = shard_map(
         body, mesh=mesh,
         in_specs=(q_spec, kv_spec, kv_spec, P(batch_axes, None),
                   P(batch_axes), P(batch_axes), new_spec, new_spec),

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def pipeline_apply(fn: Callable, stage_params, x_micro, *, mesh: Mesh,
                    stage_axis: str):
@@ -64,7 +66,7 @@ def pipeline_apply(fn: Callable, stage_params, x_micro, *, mesh: Mesh,
         return jax.lax.psum(out, stage_axis)
 
     spec = jax.tree.map(lambda _: P(stage_axis), stage_params)
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(spec, P()), out_specs=P(),
         check_vma=False,

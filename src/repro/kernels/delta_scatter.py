@@ -1,0 +1,62 @@
+"""Delta-sync row scatter as a Pallas TPU kernel (host->device snapshot
+delta application, paper Sections 3-4).
+
+One sync's dirty node rows arrive as a dense [D, W] update block plus a
+prefetched [D] row-index vector; the kernel DMAs each update row over the
+matching row of the resident [S, W] device array in place.  This is the
+device half of the PCIe analogue: the host transfers O(dirty) bytes and the
+on-device image is patched, never rebuilt.
+
+The grid iterates over update rows; the row indices are scalar-prefetched so
+the output BlockSpec can address row ``rows[i]`` before the body runs.  The
+destination is aliased to the output (``input_output_aliases``), so
+untouched rows keep their contents without any copy.
+
+Caveats (why ``ops.snapshot_delta_scatter`` defaults to the jnp ref off-TPU):
+  * scalar per-row fields flatten to W=1 blocks, far below the 128-lane
+    tile — fine for a correctness stub, wasteful on real hardware (a
+    production kernel would fuse all fields of a row into one 8 KB DMA,
+    exactly the paper's node-buffer transfer unit);
+  * duplicate rows must carry identical data (the store pads deltas with
+    repeats), which keeps the scatter order-free.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scatter_row_kernel(rows_ref, upd_ref, dst_ref, out_ref):
+    del rows_ref, dst_ref   # rows drive the out index map; dst is aliased
+    out_ref[...] = upd_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def snapshot_delta_scatter(dst, rows, upd, *, interpret: bool = False):
+    """dst[rows[i], :] = upd[i, :] for i in range(D), in place.
+
+    dst:  [S, W] resident device array (flattened trailing dims)
+    rows: [D] int32 target rows (repeats allowed with identical data)
+    upd:  [D, W] replacement rows
+    """
+    D, W = upd.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(D,),
+        in_specs=[
+            pl.BlockSpec((1, W), lambda i, rows: (i, 0)),       # upd row
+            pl.BlockSpec(memory_space=pltpu.ANY),               # dst (alias)
+        ],
+        out_specs=pl.BlockSpec((1, W), lambda i, rows: (rows[i], 0)),
+    )
+    return pl.pallas_call(
+        _scatter_row_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(dst.shape, dst.dtype),
+        input_output_aliases={2: 0},   # dst (arg 2, after rows & upd) -> out
+        interpret=interpret,
+    )(rows, upd, dst)

@@ -13,6 +13,7 @@ import functools
 
 import jax
 
+from . import delta_scatter as _ds
 from . import key_search as _ks
 from . import leaf_merge as _lm
 from . import paged_attention as _pa
@@ -41,6 +42,19 @@ def leaf_merge(nitems, nlog, backptr, hints, *, node_cap, log_cap,
     return _lm.leaf_merge(nitems, nlog, backptr, hints, node_cap=node_cap,
                           log_cap=log_cap,
                           interpret=(backend == "interpret"), **kw)
+
+
+def snapshot_delta_scatter(dst, rows, upd, backend: str | None = None, **kw):
+    """Apply one delta sync's dirty rows to a resident device array
+    (host->device snapshot patch).  ``dst``/``upd`` are [S, W]/[D, W] with
+    trailing dims flattened; see ``repro.core.read_path.apply_snapshot_delta``
+    for the whole-snapshot jnp path the store uses off-TPU."""
+    backend = backend or default_backend()
+    if backend == "ref":
+        return _ref.snapshot_delta_scatter_ref(dst, rows, upd)
+    return _ds.snapshot_delta_scatter(dst, rows, upd,
+                                      interpret=(backend == "interpret"),
+                                      **kw)
 
 
 def paged_attention(q, k_pages, v_pages, block_tables, seq_lens,

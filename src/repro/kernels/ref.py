@@ -38,6 +38,14 @@ def leaf_merge_ref(nitems, nlog, backptr, hints, *, node_cap: int,
     return perm, valid
 
 
+def snapshot_delta_scatter_ref(dst, rows, upd):
+    """Delta-sync row scatter oracle: dst[rows[i]] = upd[i].
+
+    Duplicate rows must carry identical data (the store pads deltas with
+    repeats), so application order is immaterial."""
+    return dst.at[rows].set(upd)
+
+
 def paged_attention_ref(q, k_pages, v_pages, block_tables, seq_lens,
                         start_pos=None, *, scale: float | None = None,
                         softcap: float = 0.0):

@@ -8,6 +8,17 @@ from __future__ import annotations
 
 import jax
 
+# jax.sharding.AxisType (and make_mesh's axis_types kwarg) only exist in
+# newer JAX; on older installs a plain Mesh has the same Auto semantics.
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+
+def _mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    if _AXIS_TYPE is not None:
+        return jax.make_mesh(
+            shape, axes, axis_types=(_AXIS_TYPE.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; (2, 16, 16) = 512 chips across 2 pods.
@@ -19,12 +30,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     """Arbitrary mesh (tests use small CPU meshes, e.g. (2, 4))."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)

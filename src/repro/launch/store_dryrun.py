@@ -21,10 +21,14 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import HoneycombConfig
-from repro.core.read_path import TreeSnapshot, batched_get, batched_scan
+from repro.core.read_path import (NODE_FIELDS, SnapshotDelta, TreeSnapshot,
+                                  apply_snapshot_delta, batched_get,
+                                  batched_scan)
 from repro.launch import hlo_analysis as hla
 from repro.launch.mesh import make_production_mesh
 
@@ -66,6 +70,43 @@ def abstract_snapshot(cfg: HoneycombConfig, n_items: int, shards: int):
     ), S
 
 
+def abstract_delta(cfg: HoneycombConfig, snap: TreeSnapshot, dirty_rows: int,
+                   pt_commands: int) -> SnapshotDelta:
+    """ShapeDtypeStructs for one shard's delta sync (D dirty node rows + P
+    batched page-table commands + the two scalars)."""
+    sds = jax.ShapeDtypeStruct
+    i32 = jnp.int32
+    fields = {f: sds((dirty_rows, *getattr(snap, f).shape[1:]),
+                     getattr(snap, f).dtype) for f in NODE_FIELDS}
+    return SnapshotDelta(
+        rows=sds((dirty_rows,), i32),
+        pt_lids=sds((pt_commands,), i32), pt_phys=sds((pt_commands,), i32),
+        root_lid=sds((), i32), read_version=sds((), i32), **fields)
+
+
+def delta_sync_analysis(cfg: HoneycombConfig, snap_abs: TreeSnapshot,
+                        dirty_rows: int = 256,
+                        pt_commands: int = 64) -> dict:
+    """Compile the per-shard delta application and report the PCIe-analogue
+    traffic: delta argument bytes vs the wholesale snapshot size."""
+    delta_abs = abstract_delta(cfg, snap_abs, dirty_rows, pt_commands)
+    lowered = jax.jit(apply_snapshot_delta).lower(snap_abs, delta_abs)
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    size = lambda tree: sum(
+        int(np.prod(a.shape)) * a.dtype.itemsize
+        for a in jax.tree.leaves(tree))
+    full_bytes = size(snap_abs)
+    delta_bytes = size(delta_abs)
+    return {
+        "dirty_rows": dirty_rows, "pagetable_commands": pt_commands,
+        "delta_bytes_per_sync": delta_bytes,
+        "full_snapshot_bytes": full_bytes,
+        "traffic_ratio": delta_bytes / full_bytes,
+        "compiled_temp_gb": mem.temp_size_in_bytes / 2 ** 30,
+    }
+
+
 def main(batch_per_shard: int = 512, n_items: int = 128_000_000):
     cfg = HoneycombConfig()   # paper geometry: 64-cap nodes, 8 shortcuts
     mesh = make_production_mesh(multi_pod=False)
@@ -92,7 +133,7 @@ def main(batch_per_shard: int = 512, n_items: int = 128_000_000):
     def svc(snap_stk, lo, lolen, hi, hilen):
         body = lambda s, a, b, c, d: service(
             jax.tree.map(lambda x: x[0], s), a, b, c, d)
-        return jax.shard_map(
+        return shard_map(
             body, mesh=mesh,
             in_specs=(spec_tree, P(("data", "model")), P(("data", "model")),
                       P(("data", "model")), P(("data", "model"))),
@@ -122,6 +163,7 @@ def main(batch_per_shard: int = 512, n_items: int = 128_000_000):
         "collective_bytes": coll["total_bytes"],
         "reads_per_s_per_chip_bound": (
             batch_per_shard / max(rl.memory_s, rl.compute_s, 1e-12)),
+        "delta_sync": delta_sync_analysis(cfg, snap_abs),
     }
     print(json.dumps(out, indent=1))
     p = Path("experiments/store_dryrun.json")

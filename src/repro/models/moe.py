@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from .config import ArchConfig
 from .schema import ParamDef
 
+from repro.compat import shard_map
+
 F32 = jnp.float32
 
 
@@ -199,7 +201,7 @@ def moe_ep_ragged(p, x, cfg: ArchConfig, *, mesh, dp_axes,
         out = jax.lax.psum(out, expert_axis)
         return out.reshape(Bl, S_, d_).astype(x_loc.dtype)
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(P(dp_axes, None, None), P(None, None),
                   P(expert_axis, None, None), P(expert_axis, None, None),
@@ -250,7 +252,7 @@ def moe_fsliced_ragged(p, x, cfg: ArchConfig, *, mesh, dp_axes,
         out = jax.lax.psum(out, f_axis)               # complete d_ff sums
         return out.reshape(Bl, S_, d_).astype(x_loc.dtype)
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(P(dp_axes, None, None), P(None, None),
                   P(None, None, f_axis), P(None, None, f_axis),
