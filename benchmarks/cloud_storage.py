@@ -1,32 +1,48 @@
 """Fig. 11: cloud-storage workload — 3-4-item SCANs, read fraction swept
 50%..100%, uniform and zipfian.  The paper's headline: throughput and
-cost-performance grow with read share (>=80% reads: >2x / >1.9x)."""
+cost-performance grow with read share (>=80% reads: >2x / >1.9x).
+
+Shards are a sweep axis: the sharded store serves the identical workload
+through the router (cross-shard scans decomposed per shard), with per-shard
+sync bytes/op and load imbalance metered."""
 from __future__ import annotations
 
 from .common import (TDP_BASELINE_W, TDP_HONEYCOMB_W, build_stores, emit,
                      run_mixed, uniform_sampler, zipf_sampler)
 
 
-def run(n_items: int = 4096, n_ops: int = 2048) -> dict:
+def run(n_items: int = 4096, n_ops: int = 2048,
+        shards: tuple[int, ...] = (1,)) -> dict:
     results = {}
-    hc, cp = build_stores(n_items)
-    for dist in ("uniform", "zipfian"):
-        mk = uniform_sampler if dist == "uniform" else zipf_sampler
-        for read_pct in (50, 80, 90, 95, 100):
-            spec = dict(read_frac=read_pct / 100, scan_items=3)
-            r_h = run_mixed(hc, mk(n_items, seed=5), n_ops=n_ops,
-                            n_items=n_items, **spec)
-            r_c = run_mixed(cp, mk(n_items, seed=5), n_ops=n_ops,
-                            n_items=n_items, is_honeycomb=False, **spec)
-            h, c = r_h["ops_per_s"], r_c["ops_per_s"]
-            eff = (h / TDP_HONEYCOMB_W) / (c / TDP_BASELINE_W)
-            results[f"{dist}/{read_pct}"] = {
-                "honeycomb_ops_s": h, "baseline_ops_s": c,
-                "speedup": h / c, "eff_ratio": eff}
-            emit(f"cloud_{dist}_{read_pct}r", 1e6 / h,
-                 f"speedup={h / c:.2f}x eff={eff:.2f}x")
+    for ns in shards if isinstance(shards, (tuple, list)) else (shards,):
+        hc, cp = build_stores(n_items, shards=ns)
+        tag = "" if ns == 1 else f"/s{ns}"
+        for dist in ("uniform", "zipfian"):
+            mk = uniform_sampler if dist == "uniform" else zipf_sampler
+            for read_pct in (50, 80, 90, 95, 100):
+                spec = dict(read_frac=read_pct / 100, scan_items=3)
+                r_h = run_mixed(hc, mk(n_items, seed=5), n_ops=n_ops,
+                                n_items=n_items, **spec)
+                r_c = run_mixed(cp, mk(n_items, seed=5), n_ops=n_ops,
+                                n_items=n_items, is_honeycomb=False, **spec)
+                h, c = r_h["ops_per_s"], r_c["ops_per_s"]
+                eff = (h / TDP_HONEYCOMB_W) / (c / TDP_BASELINE_W)
+                sync = r_h["sync"]
+                results[f"{dist}/{read_pct}{tag}"] = {
+                    "honeycomb_ops_s": h, "baseline_ops_s": c,
+                    "speedup": h / c, "eff_ratio": eff,
+                    "shards": ns, "sync_bytes_per_op": sync["bytes_per_op"],
+                    "load_imbalance": sync.get("load_imbalance"),
+                    "per_shard_bytes_per_op": sync.get(
+                        "per_shard_bytes_per_op")}
+                extra = ""
+                if "load_imbalance" in sync:
+                    extra = f" imbal={sync['load_imbalance']:.2f}"
+                emit(f"cloud_{dist}_{read_pct}r{tag.replace('/', '_')}",
+                     1e6 / h, f"speedup={h / c:.2f}x eff={eff:.2f}x"
+                     f" sync_B/op={sync['bytes_per_op']:.0f}{extra}")
     return results
 
 
 if __name__ == "__main__":
-    run()
+    run(shards=(1, 4))

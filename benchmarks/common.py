@@ -16,7 +16,8 @@ import time
 import numpy as np
 
 from repro.baselines.cpu_store import CpuOrderedStore
-from repro.core import HoneycombConfig, HoneycombStore
+from repro.core import (HoneycombConfig, HoneycombStore,
+                        ShardedHoneycombStore, uniform_int_boundaries)
 from repro.core.keys import int_key
 
 TDP_BASELINE_W = 127.0
@@ -46,13 +47,23 @@ def uniform_sampler(n: int, seed: int = 0):
 
 def build_stores(n_items: int = 8192, val_bytes: int = 16,
                  cfg: HoneycombConfig | None = None, seed: int = 0,
-                 honeycomb: bool = True, baseline: bool = True):
+                 honeycomb: bool = True, baseline: bool = True,
+                 shards: int = 1):
     """Load both stores with the same random-order keys (paper: inserts are
-    uniform random)."""
+    uniform random).  ``shards > 1`` builds the live range-sharded store
+    (uniform split of the int-key space) instead of the single-device
+    facade — the sweep axis for the scale-out benchmarks."""
     rng = np.random.default_rng(seed)
     order = rng.permutation(n_items)
     val = bytes(val_bytes)
-    hc = HoneycombStore(cfg or HoneycombConfig()) if honeycomb else None
+    if not honeycomb:
+        hc = None
+    elif shards > 1:
+        hc = ShardedHoneycombStore(
+            cfg or HoneycombConfig(), shards=shards,
+            boundaries=uniform_int_boundaries(n_items, shards))
+    else:
+        hc = HoneycombStore(cfg or HoneycombConfig())
     cp = CpuOrderedStore() if baseline else None
     for i in order:
         if hc:
@@ -72,7 +83,13 @@ def sync_traffic(store) -> dict:
             "full_syncs": s.full_syncs, "delta_syncs": s.delta_syncs,
             "pagetable_commands": s.pagetable_commands,
             "read_version_updates": s.read_version_updates,
+            "log_wire_bytes": s.log_wire_bytes,
             "delta_fraction": s.delta_fraction}
+
+
+_SYNC_DIFF_KEYS = ("bytes_synced", "snapshots", "full_syncs", "delta_syncs",
+                   "pagetable_commands", "read_version_updates",
+                   "log_wire_bytes")
 
 
 def run_mixed(store, sampler, *, n_ops: int, read_frac: float,
@@ -84,6 +101,10 @@ def run_mixed(store, sampler, *, n_ops: int, read_frac: float,
     the systems comparison).  Returns ops/s, latency stats and (for
     Honeycomb) the sync traffic the workload generated."""
     start_sync = sync_traffic(store) if is_honeycomb else None
+    sharded = is_honeycomb and hasattr(store, "per_shard_sync_stats")
+    start_per = ([s.bytes_synced for s in store.per_shard_sync_stats]
+                 if sharded else None)
+    start_ops = list(store.shard_ops) if sharded else None
     rng = np.random.default_rng(seed)
     ops = rng.random(n_ops) < read_frac
     keys = sampler(n_ops)
@@ -112,11 +133,19 @@ def run_mixed(store, sampler, *, n_ops: int, read_frac: float,
     out = {"ops_per_s": done / dt, "seconds": dt, "ops": done}
     if is_honeycomb:
         end = sync_traffic(store)
-        out["sync"] = {k: end[k] - start_sync[k]
-                       for k in ("bytes_synced", "snapshots", "full_syncs",
-                                 "delta_syncs", "pagetable_commands",
-                                 "read_version_updates")}
+        out["sync"] = {k: end[k] - start_sync[k] for k in _SYNC_DIFF_KEYS}
         out["sync"]["bytes_per_op"] = out["sync"]["bytes_synced"] / max(done, 1)
+        if sharded:
+            per = [s.bytes_synced - b0 for s, b0 in
+                   zip(store.per_shard_sync_stats, start_per)]
+            out["sync"]["per_shard_bytes_per_op"] = [
+                b / max(done, 1) for b in per]
+            # imbalance over THIS run's routed requests only (the lifetime
+            # counter would be dominated by the balanced load phase)
+            ops = [b - a for a, b in zip(start_ops, store.shard_ops)]
+            total = sum(ops)
+            out["sync"]["load_imbalance"] = (
+                max(ops) / (total / len(ops)) if total else 0.0)
     return out
 
 

@@ -21,13 +21,19 @@ WRITE_BATCHES = (16, 64, 256)
 
 
 def sync_traffic_curve(st: HoneycombStore, n_items: int) -> dict:
-    """Delta vs full host->device bytes for growing write batches."""
+    """Delta vs full host->device bytes for growing write batches, plus the
+    append-only log-entry wire-format estimate (key+value+op per write) —
+    the paper's log-block byte accounting.  The wire bytes lower-bound what
+    a log-structured delta encoding would move; dirty-row deltas transfer
+    whole node rows and sit between that bound and a full republish."""
     st.export_snapshot()                      # make the snapshot resident
     curve = {}
     rng = np.random.default_rng(23)
     for w in WRITE_BATCHES:
+        w0 = st.sync_stats.log_wire_bytes
         for k in rng.integers(0, n_items, w):
             st.update(int_key(int(k)), b"u" * 16)
+        wire_bytes = st.sync_stats.log_wire_bytes - w0
         b0 = st.sync_stats.bytes_synced
         st.export_snapshot()
         delta_bytes = st.sync_stats.bytes_synced - b0
@@ -36,7 +42,10 @@ def sync_traffic_curve(st: HoneycombStore, n_items: int) -> dict:
         st.export_snapshot(full=True)
         full_bytes = st.sync_stats.bytes_synced - b1
         curve[w] = {"delta_bytes": delta_bytes, "full_bytes": full_bytes,
+                    "wire_bytes": wire_bytes,
                     "ratio": delta_bytes / full_bytes,
+                    "wire_ratio": wire_bytes / full_bytes,
+                    "wire_vs_delta": wire_bytes / max(delta_bytes, 1),
                     "delta_fraction": delta_fraction}
     return curve
 
@@ -72,7 +81,8 @@ def run(n_items: int = 2048, n_ops: int = 1024) -> dict:
         for w, c in curve.items():
             emit(f"logcap_{log_cap}_sync_w{w}", c["delta_bytes"],
                  f"delta={c['delta_bytes']}B full={c['full_bytes']}B "
-                 f"ratio={c['ratio']:.4f}")
+                 f"wire={c['wire_bytes']}B ratio={c['ratio']:.4f} "
+                 f"wire_ratio={c['wire_ratio']:.5f}")
     return results
 
 

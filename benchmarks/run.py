@@ -4,11 +4,15 @@ Prints ``name,us_per_call,derived`` CSV lines (shared harness contract).
 Absolute CPU-container numbers are not the paper's Mops/s; the reproduced
 artifacts are the relative trends and the analytic byte model — see
 benchmarks/common.py and EXPERIMENTS.md.
+
+``--shards 1,4`` sweeps the shard axis for the sections that serve the live
+range-sharded store (YCSB, cloud-storage).
 """
 from __future__ import annotations
 
+import argparse
+import inspect
 import json
-import sys
 import time
 from pathlib import Path
 
@@ -30,15 +34,25 @@ SECTIONS = [
 
 
 def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("only", nargs="?", default=None,
+                    help="run only sections whose name contains this")
+    ap.add_argument("--shards", default="1",
+                    help="comma-separated shard counts for the sharded "
+                         "sections (e.g. 1,4)")
+    args = ap.parse_args()
+    shards = tuple(int(s) for s in args.shards.split(","))
     results = {}
     for name, fn in SECTIONS:
-        if only and only not in name:
+        if args.only and args.only not in name:
             continue
+        kwargs = {}
+        if "shards" in inspect.signature(fn).parameters:
+            kwargs["shards"] = shards
         print(f"# --- {name} ---", flush=True)
         t0 = time.perf_counter()
         try:
-            results[name] = fn()
+            results[name] = fn(**kwargs)
         except Exception as e:  # noqa: BLE001 — keep the suite running
             print(f"{name},0.00,ERROR:{type(e).__name__}:{e}")
             results[name] = {"error": str(e)}

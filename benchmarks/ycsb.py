@@ -3,6 +3,11 @@
 Workloads (Table 2): A 50/50 update, B 95/5, C read-only, D 95/5 insert,
 E scan-heavy (1..100-item scans, here capped for CPU scale), F
 read-modify-write.  Reported: ops/s and ops/s/W (TDP model from the paper).
+
+Shards are a sweep axis: the same workloads drive the live range-sharded
+``ShardedHoneycombStore`` (the paper's Section 7 scale-out shape), with
+per-shard sync bytes/op and router load imbalance metered alongside the
+single-device numbers.
 """
 from __future__ import annotations
 
@@ -19,31 +24,38 @@ WORKLOADS = {
 }
 
 
-def run(n_items: int = 4096, n_ops: int = 2048) -> dict:
+def run(n_items: int = 4096, n_ops: int = 2048,
+        shards: tuple[int, ...] = (1,)) -> dict:
     results = {}
-    hc, cp = build_stores(n_items)
-    for dist in ("uniform", "zipfian"):
-        for wl, spec in WORKLOADS.items():
-            mk = uniform_sampler if dist == "uniform" else zipf_sampler
-            r_h = run_mixed(hc, mk(n_items, seed=3), n_ops=n_ops,
-                            n_items=n_items, **spec)
-            r_c = run_mixed(cp, mk(n_items, seed=3), n_ops=n_ops,
-                            n_items=n_items, is_honeycomb=False, **spec)
-            h, c = r_h["ops_per_s"], r_c["ops_per_s"]
-            eff_h = h / TDP_HONEYCOMB_W
-            eff_c = c / TDP_BASELINE_W
-            sync = r_h["sync"]
-            results[f"{wl}/{dist}"] = {
-                "honeycomb_ops_s": h, "baseline_ops_s": c,
-                "speedup": h / c, "eff_ratio": eff_h / eff_c,
-                "sync": sync}
-            emit(f"ycsb_{wl}_{dist}", 1e6 / h,
-                 f"speedup={h / c:.2f}x eff={eff_h / eff_c:.2f}x "
-                 f"sync_B/op={sync['bytes_per_op']:.0f} "
-                 f"deltas={sync['delta_syncs']}/{sync['snapshots']} "
-                 f"pt_cmds={sync['pagetable_commands']}")
+    for ns in shards if isinstance(shards, (tuple, list)) else (shards,):
+        hc, cp = build_stores(n_items, shards=ns)
+        tag = "" if ns == 1 else f"/s{ns}"
+        for dist in ("uniform", "zipfian"):
+            for wl, spec in WORKLOADS.items():
+                mk = uniform_sampler if dist == "uniform" else zipf_sampler
+                r_h = run_mixed(hc, mk(n_items, seed=3), n_ops=n_ops,
+                                n_items=n_items, **spec)
+                r_c = run_mixed(cp, mk(n_items, seed=3), n_ops=n_ops,
+                                n_items=n_items, is_honeycomb=False, **spec)
+                h, c = r_h["ops_per_s"], r_c["ops_per_s"]
+                eff_h = h / TDP_HONEYCOMB_W
+                eff_c = c / TDP_BASELINE_W
+                sync = r_h["sync"]
+                results[f"{wl}/{dist}{tag}"] = {
+                    "honeycomb_ops_s": h, "baseline_ops_s": c,
+                    "speedup": h / c, "eff_ratio": eff_h / eff_c,
+                    "shards": ns, "sync": sync}
+                extra = ""
+                if "load_imbalance" in sync:
+                    extra = f" imbal={sync['load_imbalance']:.2f}"
+                emit(f"ycsb_{wl}_{dist}{tag.replace('/', '_')}", 1e6 / h,
+                     f"speedup={h / c:.2f}x eff={eff_h / eff_c:.2f}x "
+                     f"sync_B/op={sync['bytes_per_op']:.0f} "
+                     f"wire_B={sync['log_wire_bytes']} "
+                     f"deltas={sync['delta_syncs']}/{sync['snapshots']} "
+                     f"pt_cmds={sync['pagetable_commands']}{extra}")
     return results
 
 
 if __name__ == "__main__":
-    run()
+    run(shards=(1, 4))

@@ -1,7 +1,9 @@
 """Honeycomb core: the paper's contribution as a composable JAX module."""
-from .config import HoneycombConfig, DEFAULT_CONFIG
+from .config import HoneycombConfig, DEFAULT_CONFIG, ShardingConfig
 from .btree import HoneycombTree
+from .shard import StoreShard
 from .store import HoneycombStore, SyncStats
+from .router import ShardedHoneycombStore, uniform_int_boundaries
 from .read_path import (TreeSnapshot, SnapshotDelta, ScanResult, GetResult,
                         apply_snapshot_delta, batched_get, batched_scan,
                         descend, log_sort_positions)
@@ -9,7 +11,9 @@ from .scheduler import OutOfOrderScheduler, Request
 from .cache import InteriorCache
 
 __all__ = [
-    "HoneycombConfig", "DEFAULT_CONFIG", "HoneycombTree", "HoneycombStore",
+    "HoneycombConfig", "DEFAULT_CONFIG", "ShardingConfig", "HoneycombTree",
+    "HoneycombStore", "StoreShard", "ShardedHoneycombStore",
+    "uniform_int_boundaries",
     "TreeSnapshot", "SnapshotDelta", "ScanResult", "GetResult",
     "apply_snapshot_delta", "batched_get", "batched_scan",
     "descend", "log_sort_positions", "OutOfOrderScheduler", "Request",

@@ -545,6 +545,8 @@ class HoneycombTree:
         if root_of_split is None:
             new_root = h.alloc()   # grow the tree
             self._fill_interior(new_root, new_left_lid, [promoted], wv)
+            if c.mvcc:  # old-read-version walks enter the pre-growth subtree
+                h.oldptr[new_root] = child.phys
             self.root_lid = self.pt.alloc_lid(new_root)
             self.height += 1
             self.stats.grows += 1

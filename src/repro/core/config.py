@@ -113,4 +113,27 @@ class HoneycombConfig:
                 + self.log_bytes)
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardingConfig:
+    """Range partition of the keyspace for ``ShardedHoneycombStore``.
+
+    ``boundaries`` are ``shards - 1`` strictly ascending byte-string split
+    points; shard ``i`` owns keys in ``[boundaries[i-1], boundaries[i])``
+    (shard 0 is unbounded below, the last shard unbounded above).  ``None``
+    defaults to a uniform split of the 8-byte big-endian integer keyspace.
+    """
+    shards: int = 1
+    boundaries: tuple[bytes, ...] | None = None
+
+    def __post_init__(self):
+        assert self.shards >= 1, "need at least one shard"
+        if self.boundaries is not None:
+            b = self.boundaries
+            assert len(b) == self.shards - 1, (
+                f"{self.shards} shards need {self.shards - 1} boundaries, "
+                f"got {len(b)}")
+            assert all(x < y for x, y in zip(b, b[1:])), (
+                "shard boundaries must be strictly ascending")
+
+
 DEFAULT_CONFIG = HoneycombConfig()

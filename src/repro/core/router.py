@@ -1,0 +1,262 @@
+"""ShardedHoneycombStore — range-sharded serving stack (scale-out layer).
+
+The paper serves one NIC; its cost-performance argument (Section 7) is about
+scale-out.  This module lifts the single-device ``StoreShard`` into the
+standard scale-out deployment for ordered stores (the same split
+``launch/store_dryrun.py`` models for the 256-chip mesh): the keyspace is
+range-partitioned across N shards — each with its OWN tree, resident device
+snapshot, incremental delta sync and ``SyncStats`` — behind the same
+``put/get/scan/get_batch/scan_batch/export_snapshot`` facade, with a request
+router in front:
+
+  * writes route to the owning shard; each shard syncs independently (a
+    write burst confined to one shard delta-syncs only that shard).
+  * ``get_batch`` splits by owning shard and dispatches one dense device
+    batch per shard; responses scatter back to arrival order.
+  * cross-shard SCANs decompose into per-shard sub-ranges — sub-range s >
+    first starts at the shard's lower boundary, so per-shard floor-start
+    semantics compose exactly — and results stitch in key order.  When the
+    first shard holds no key <= lo, the global floor item (largest key <=
+    lo, Section 3.3) is back-filled from the nearest non-empty shard to the
+    left, so a cross-shard SCAN returns byte-for-byte what the unsharded
+    store would.
+  * the read path is collective-free: no shard ever talks to another; the
+    router stitches on the host, which is the serving-layer split the
+    dry-run's roofline assumes.
+
+``ShardedHoneycombStore(shards=1)`` is operation-for-operation equivalent to
+``HoneycombStore`` — same results, same sync byte counts (enforced by
+tests/test_router.py) — so every higher layer can hold a single handle and
+scale by configuration.
+"""
+from __future__ import annotations
+
+import bisect
+import contextlib
+import dataclasses
+from typing import Sequence
+
+from .btree import TreeStats
+from .config import HoneycombConfig, ShardingConfig
+from .keys import int_key
+from .shard import StoreShard, SyncStats
+
+
+def uniform_int_boundaries(n_items: int, shards: int,
+                           width: int = 8) -> tuple[bytes, ...]:
+    """Split points that spread ``int_key(0..n_items)`` evenly over
+    ``shards`` ranges (benchmarks' default partitioning)."""
+    return tuple(int_key(n_items * i // shards, width)
+                 for i in range(1, shards))
+
+
+class ShardedHoneycombStore:
+    """Range-sharded store: N independent ``StoreShard``s behind one
+    facade, requests pre-partitioned by a router."""
+
+    def __init__(self, cfg: HoneycombConfig | None = None,
+                 heap_capacity: int = 1024,
+                 shards: int | ShardingConfig = 1,
+                 boundaries: Sequence[bytes] | None = None):
+        self.cfg = cfg or HoneycombConfig()
+        if isinstance(shards, ShardingConfig):
+            sharding = shards
+        else:
+            sharding = ShardingConfig(
+                shards=shards,
+                boundaries=tuple(boundaries) if boundaries is not None
+                else None)
+        self.sharding = sharding
+        n = sharding.shards
+        if sharding.boundaries is not None:
+            self.boundaries = list(sharding.boundaries)
+        else:  # uniform split of the 8-byte integer keyspace
+            self.boundaries = list(uniform_int_boundaries(2 ** 64, n))
+        self.shards = [StoreShard(self.cfg, heap_capacity, shard_id=i)
+                       for i in range(n)]
+        self.shard_ops = [0] * n    # routed requests per shard (imbalance)
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    # ------------------------------------------------------------- routing
+    def shard_for_key(self, key: bytes) -> int:
+        """Owning shard: i such that boundaries[i-1] <= key < boundaries[i]."""
+        return bisect.bisect_right(self.boundaries, key)
+
+    def _shard_span(self, lo: bytes, hi: bytes) -> tuple[int, int]:
+        s_lo = self.shard_for_key(lo)
+        return s_lo, max(s_lo, self.shard_for_key(hi))
+
+    def _sub_lo(self, s: int, s_lo: int, lo: bytes) -> bytes:
+        """Sub-range start for shard s of a scan beginning at lo: the scan's
+        own lo on the owning shard, the shard's lower boundary after it (the
+        boundary key itself belongs to the shard, so per-shard floor-start
+        returns exactly the keys in [boundary, hi])."""
+        return lo if s == s_lo else self.boundaries[s - 1]
+
+    # ------------------------------------------------------------- writes
+    def put(self, key: bytes, value: bytes, thread: int = 0):
+        s = self.shard_for_key(key)
+        self.shard_ops[s] += 1
+        self.shards[s].put(key, value, thread)
+
+    def update(self, key: bytes, value: bytes, thread: int = 0):
+        s = self.shard_for_key(key)
+        self.shard_ops[s] += 1
+        self.shards[s].update(key, value, thread)
+
+    def delete(self, key: bytes, thread: int = 0):
+        s = self.shard_for_key(key)
+        self.shard_ops[s] += 1
+        self.shards[s].delete(key, thread)
+
+    @contextlib.contextmanager
+    def deferred_sync(self):
+        """Suspend every shard's automatic policy syncs for a write burst
+        the caller closes with one export (scheduler.run)."""
+        with contextlib.ExitStack() as stack:
+            for sh in self.shards:
+                stack.enter_context(sh.deferred_sync())
+            yield
+
+    # ---------------------------------------------------- host-side reads
+    def get(self, key: bytes) -> bytes | None:
+        s = self.shard_for_key(key)
+        self.shard_ops[s] += 1
+        return self.shards[s].get(key)
+
+    def scan(self, lo: bytes, hi: bytes,
+             max_items: int | None = None) -> list[tuple[bytes, bytes]]:
+        """Host-side cross-shard SCAN: per-shard sub-scans stitched in key
+        order, global floor back-filled from the left when needed."""
+        s_lo, s_hi = self._shard_span(lo, hi)
+        items: list[tuple[bytes, bytes]] = []
+        for s in range(s_lo, s_hi + 1):
+            self.shard_ops[s] += 1
+            items.extend(self.shards[s].scan(
+                self._sub_lo(s, s_lo, lo), hi, max_items))
+            if max_items and len(items) >= max_items:
+                break
+        if lo <= hi and s_lo > 0 and not (items and items[0][0] <= lo):
+            for s in range(s_lo - 1, -1, -1):    # nearest non-empty left shard
+                self.shard_ops[s] += 1
+                floor = self.shards[s].scan(lo, lo)
+                if floor:
+                    items = floor + items
+                    break
+        return items[:max_items] if max_items else items
+
+    # ------------------------------------------------- snapshot mechanics
+    def export_snapshot(self, force: bool = False, full: bool = False):
+        """Sync every DIRTY shard (clean shards return their resident
+        snapshot untouched — per-shard delta independence).  Returns the
+        per-shard snapshot list."""
+        return [sh.export_snapshot(force=force, full=full)
+                for sh in self.shards]
+
+    # ------------------------------------------------- accelerated reads
+    def get_batch(self, keys: Sequence[bytes]) -> list[bytes | None]:
+        """Batched GET: split by owning shard, one dense device batch per
+        shard, responses scattered back to arrival order."""
+        keys = list(keys)
+        out: list[bytes | None] = [None] * len(keys)
+        by_shard: dict[int, list[int]] = {}
+        for i, k in enumerate(keys):
+            by_shard.setdefault(self.shard_for_key(k), []).append(i)
+        for s, idxs in sorted(by_shard.items()):
+            self.shard_ops[s] += len(idxs)
+            for i, v in zip(idxs,
+                            self.shards[s].get_batch([keys[i] for i in idxs])):
+                out[i] = v
+        return out
+
+    def scan_batch(self, ranges: Sequence[tuple[bytes, bytes]]
+                   ) -> list[list[tuple[bytes, bytes]]]:
+        """Batched SCAN: decompose each range into per-shard sub-ranges,
+        dispatch one dense batch per shard, stitch per request in key order
+        (shard order IS key order), then back-fill missing global floors."""
+        ranges = list(ranges)
+        if not ranges:
+            return []
+        spans = [self._shard_span(lo, hi) for lo, hi in ranges]
+        per_shard: dict[int, list[tuple[int, bytes, bytes]]] = {}
+        for i, (lo, hi) in enumerate(ranges):
+            s_lo, s_hi = spans[i]
+            for s in range(s_lo, s_hi + 1):
+                per_shard.setdefault(s, []).append(
+                    (i, self._sub_lo(s, s_lo, lo), hi))
+        parts: dict[int, list[list[tuple[bytes, bytes]]]] = {
+            i: [] for i in range(len(ranges))}
+        for s, subs in sorted(per_shard.items()):
+            self.shard_ops[s] += len(subs)
+            res = self.shards[s].scan_batch([(a, b) for _, a, b in subs])
+            for (i, _, _), sub_items in zip(subs, res):
+                parts[i].append(sub_items)   # shards visited in key order
+        out = [[kv for chunk in parts[i] for kv in chunk]
+               for i in range(len(ranges))]
+        # floor back-fill: requests whose owning shard held no key <= lo
+        pending = [(i, spans[i][0] - 1, lo)
+                   for i, (lo, hi) in enumerate(ranges)
+                   if spans[i][0] > 0 and lo <= hi
+                   and not (out[i] and out[i][0][0] <= lo)]
+        while pending:
+            probe: dict[int, list[tuple[int, bytes]]] = {}
+            for i, s, lo in pending:
+                probe.setdefault(s, []).append((i, lo))
+            pending = []
+            for s, reqs in sorted(probe.items()):
+                self.shard_ops[s] += len(reqs)
+                res = self.shards[s].scan_batch([(lo, lo) for _, lo in reqs])
+                for (i, lo), floor in zip(reqs, res):
+                    if floor:
+                        out[i] = floor + out[i]
+                    elif s > 0:
+                        pending.append((i, s - 1, lo))
+        return out
+
+    # ------------------------------------------------------------- meters
+    @property
+    def sync_stats(self) -> SyncStats:
+        """Aggregate SyncStats across shards (counters sum; delta_fraction
+        reports the worst shard)."""
+        agg = SyncStats()
+        for sh in self.shards:
+            agg.merge(sh.sync_stats)
+        return agg
+
+    @property
+    def per_shard_sync_stats(self) -> list[SyncStats]:
+        return [sh.sync_stats for sh in self.shards]
+
+    @property
+    def stats(self) -> TreeStats:
+        """Aggregate tree stats across shards."""
+        agg = TreeStats()
+        for sh in self.shards:
+            for f in dataclasses.fields(TreeStats):
+                setattr(agg, f.name,
+                        getattr(agg, f.name) + getattr(sh.stats, f.name))
+        return agg
+
+    @property
+    def per_shard_stats(self) -> list[TreeStats]:
+        return [sh.stats for sh in self.shards]
+
+    @property
+    def load_imbalance(self) -> float:
+        """max/mean routed requests per shard (1.0 = perfectly balanced,
+        0.0 = no traffic yet)."""
+        total = sum(self.shard_ops)
+        if not total:
+            return 0.0
+        return max(self.shard_ops) / (total / len(self.shard_ops))
+
+    # ------------------------------------------------------------- misc
+    def collect_garbage(self) -> int:
+        return sum(sh.collect_garbage() for sh in self.shards)
+
+    def check_invariants(self):
+        for sh in self.shards:
+            sh.tree.check_invariants()

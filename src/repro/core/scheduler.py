@@ -1,24 +1,36 @@
-"""Request scheduling: out-of-order batch composition (paper Section 4.1).
+"""Request scheduling: out-of-order, shard-aware batch composition
+(paper Section 4.1, lifted to the sharded serving stack).
 
 The FPGA avoids head-of-line blocking by letting requests complete out of
 order.  In SPMD execution the whole batch advances in lock step, so the
-equivalent straggler mitigation is *batch composition*: requests with similar
-expected work (scan width, key size) are bucketed together so a vectorized
-step is not held hostage by one expensive lane, and responses are re-ordered
-back to arrival order on completion — out-of-order execution with in-order
-delivery, exactly the accelerator's contract.
+equivalent straggler mitigation is *batch composition*: read requests are
+bucketed by ``(shard, kind, cost_class)`` — owning range-shard first, then
+expected work (scan width) — so a vectorized step is neither held hostage by
+one expensive lane nor scattered across device snapshots, and responses are
+re-ordered back to arrival order on completion: out-of-order execution with
+in-order delivery, exactly the accelerator's contract.
 
-Writes are first-class requests too: ``run()`` applies every pending write
-host-side, in submission order, then performs ONE host->device sync (the
-delta snapshot export) before dispatching the read batches — the paper's
-batched synchronization (Sections 3-4: many writes amortize one set of PCIe
-page-table/read-version commands).
+Writes are first-class requests too.  One ``run()`` performs the sharded
+serving stack's full cycle:
+
+  1. apply every pending write host-side, in submission order, routed to
+     its owning shard (automatic per-shard policy syncs deferred);
+  2. ONE host->device delta sync per DIRTY shard — the paper's batched
+     synchronization (Sections 3-4), per device;
+  3. dispatch dense per-shard read batches (``ready_batches()`` is the
+     single source of dispatch order — run() consumes it, so the two can
+     never disagree).
+
+Bucketing by shard requires a routing function: pass
+``shard_of=router.shard_for_key`` when driving a ``ShardedHoneycombStore``;
+the default routes everything to shard 0, which reproduces the unsharded
+behaviour exactly.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict
-from typing import Any, Iterable, Sequence
+from typing import Any, Callable, Iterable, Sequence
 
 WRITE_KINDS = ("put", "update", "delete")
 
@@ -34,20 +46,26 @@ class Request:
 
 
 class OutOfOrderScheduler:
-    """Buckets read requests by cost class, queues writes in order,
-    dispatches dense batches, reassembles responses in arrival order."""
+    """Buckets read requests by (shard, kind, cost class), queues writes in
+    order, dispatches dense per-shard batches, reassembles responses in
+    arrival order."""
 
     def __init__(self, batch_size: int = 256,
-                 cost_classes: Sequence[int] = (1, 4, 16, 64)):
+                 cost_classes: Sequence[int] = (1, 4, 16, 64),
+                 shard_of: Callable[[bytes], int] | None = None):
         self.batch_size = batch_size
         self.cost_classes = tuple(sorted(cost_classes))
-        self._buckets: dict[tuple[str, int], list[Request]] = defaultdict(list)
+        # routing function key -> owning shard; SCANs bucket by their lo key
+        # (the store facade still decomposes any cross-shard tail)
+        self._shard_of = shard_of or (lambda key: 0)
+        self._buckets: dict[tuple[int, str, int], list[Request]] = \
+            defaultdict(list)
         self._writes: list[Request] = []
         self._next_rid = 0
         self.dispatched_batches = 0
         self.dispatched_requests = 0
         self.applied_writes = 0
-        self.syncs = 0             # host->device syncs run() triggered
+        self.syncs = 0             # per-shard host->device syncs run() did
 
     def _cost_class(self, r: Request) -> int:
         for c in self.cost_classes:
@@ -63,15 +81,17 @@ class OutOfOrderScheduler:
         if kind in WRITE_KINDS:
             self._writes.append(r)      # writes keep submission order
         else:
-            self._buckets[(kind, self._cost_class(r))].append(r)
+            self._buckets[(self._shard_of(key), kind,
+                           self._cost_class(r))].append(r)
         return rid
 
     def ready_batches(self, flush: bool = False
                       ) -> Iterable[tuple[str, list[Request]]]:
         """Full read batches (or all remaining when flushing), densest
-        first."""
-        for (kind, _), reqs in sorted(self._buckets.items(),
-                                      key=lambda kv: -len(kv[1])):
+        first.  Every batch is shard- and cost-homogeneous.  This is THE
+        dispatch order — run() consumes it."""
+        for (_, kind, _), reqs in sorted(self._buckets.items(),
+                                         key=lambda kv: -len(kv[1])):
             while len(reqs) >= self.batch_size or (flush and reqs):
                 batch = reqs[: self.batch_size]
                 del reqs[: self.batch_size]
@@ -79,8 +99,9 @@ class OutOfOrderScheduler:
 
     def _apply_writes(self, store) -> dict[int, Any]:
         """Host-side write phase: every queued write in submission order,
-        no device sync in between (that is the whole point) — the store's
-        own "every_k" policy is deferred for the duration of the burst."""
+        routed by the store facade, no device sync in between (that is the
+        whole point) — each shard's own "every_k" policy is deferred for
+        the duration of the burst."""
         out: dict[int, Any] = {}
         with store.deferred_sync():
             for r in self._writes:
@@ -97,24 +118,24 @@ class OutOfOrderScheduler:
 
     def run(self, store, flush: bool = True) -> dict[int, Any]:
         """Drive all pending requests through the store: writes first (in
-        order), one batched sync, then the batched read paths.  Returns
-        {rid: response} with in-order semantics per request id."""
+        order), one batched sync per dirty shard, then the batched read
+        paths.  Returns {rid: response} with in-order semantics per request
+        id."""
         out = self._apply_writes(store)
         if out:
-            # ONE sync covers the whole write burst — the paper's batched
-            # PCIe synchronization (delta export scales with the burst)
+            # ONE sync per dirty shard covers the whole write burst — the
+            # paper's batched PCIe synchronization (delta export scales
+            # with the burst); clean shards are untouched
+            before = store.sync_stats.snapshots
             store.export_snapshot()
-            self.syncs += 1
-        for (kind, _), reqs in list(self._buckets.items()):
-            while reqs and (flush or len(reqs) >= self.batch_size):
-                batch = reqs[: self.batch_size]
-                del reqs[: self.batch_size]
-                self.dispatched_batches += 1
-                self.dispatched_requests += len(batch)
-                if kind == "get":
-                    res = store.get_batch([r.key for r in batch])
-                else:
-                    res = store.scan_batch([(r.key, r.hi) for r in batch])
-                for r, v in zip(batch, res):
-                    out[r.rid] = v
+            self.syncs += store.sync_stats.snapshots - before
+        for kind, batch in self.ready_batches(flush=flush):
+            self.dispatched_batches += 1
+            self.dispatched_requests += len(batch)
+            if kind == "get":
+                res = store.get_batch([r.key for r in batch])
+            else:
+                res = store.scan_batch([(r.key, r.hi) for r in batch])
+            for r, v in zip(batch, res):
+                out[r.rid] = v
         return out

@@ -1,332 +1,37 @@
-"""HoneycombStore — the system facade (paper Section 2).
+"""HoneycombStore — the single-device facade (paper Section 2).
 
-Ties the host-side writer (``HoneycombTree``), the MVCC/epoch machinery and
-the accelerator read path together:
+The store stack is layered for scale-out:
 
-  * ``export_snapshot()`` — the host->accelerator synchronization point.  It
-    plays the role of the PCIe DMA + page-table update commands.  The first
-    export publishes the packed heap arrays wholesale; afterwards a resident
-    device snapshot is kept and only *dirty node rows* (in-place log appends,
-    fresh buffers, sibling relinks, GC wipes) plus the batched page-table
-    commands and the read version are scattered in — so sync traffic scales
-    with write volume, not store size, exactly the paper's PCIe-amortization
-    argument (log blocks exist to make this cheap).  A configurable dirty
-    fraction (``delta_full_threshold``) falls back to wholesale republish
-    when a delta would not pay.  ``SyncStats`` meters both modes so
-    benchmarks reproduce the paper's sync-traffic curves.
-  * ``cfg.sync_policy`` — when the sync happens: lazily before device reads
-    ("on_read", default), after every K writes ("every_k", the paper's
-    batched synchronization), or only when explicitly requested
-    ("explicit", stale-but-consistent reads).
-  * ``get_batch()/scan_batch()`` — wait-free accelerated reads.  Each batch
-    is stamped with epoch sequence numbers (Section 4.1: S_old/S_new) so the
-    host GC never reclaims a buffer a batch might still read.
-  * host fallbacks — the paper runs SCANs on CPU cores too when beneficial
-    (Section 6.3); ``get()``/``scan()`` mirror that path.
+  * ``StoreShard`` (core/shard.py) — the per-device unit: one host B+Tree
+    writer, one resident device snapshot kept fresh by the incremental
+    delta-sync subsystem, one ``SyncStats`` meter.  All snapshot/delta
+    mechanics live there.
+  * ``HoneycombStore`` (this module) — the paper's deployment: ONE shard
+    serving the whole keyspace behind the public
+    ``put/get/scan/get_batch/scan_batch/export_snapshot`` facade.  It is
+    ``StoreShard`` under its service name; everything documented on the
+    shard (sync policies, epoch-stamped wait-free reads, host SCAN
+    fallbacks pinned to the snapshot read version under "explicit") holds
+    here unchanged.
+  * ``ShardedHoneycombStore`` (core/router.py) — the scale-out deployment:
+    the keyspace range-partitioned across N shards behind the SAME facade,
+    with a router that splits batches by owning shard, decomposes
+    cross-shard SCANs and stitches results in key order, and syncs each
+    dirty shard independently.
+
+``ShardedHoneycombStore(shards=1)`` is operation-for-operation equivalent
+to ``HoneycombStore`` (same results, same sync byte counts), which is the
+refactor's invariant and is enforced by tests/test_router.py.
 """
 from __future__ import annotations
 
-import contextlib
-import dataclasses
-import functools
-from typing import Sequence
+from .shard import StoreShard, SyncStats, WIRE_ENTRY_OVERHEAD
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from .btree import HoneycombTree
-from .cache import InteriorCache
-from .config import HoneycombConfig
-from .keys import pack_keys
-from .read_path import (NODE_FIELDS, GetResult, ScanResult, SnapshotDelta,
-                        TreeSnapshot, apply_snapshot_delta, batched_get,
-                        batched_scan)
-
-# jit the accelerator entry points once per (config, snapshot-shape): the
-# eager op-by-op dispatch otherwise accumulates thousands of tiny LLVM JIT
-# dylibs across a benchmark run (vm.max_map_count exhaustion)
-_jit_get = jax.jit(batched_get, static_argnames="cfg")
-_jit_scan = jax.jit(batched_scan, static_argnames="cfg")
-# the delta-sync scatter; NOT donated — old snapshots held by in-flight
-# batches must keep answering at their read version
-_jit_apply_delta = jax.jit(apply_snapshot_delta)
-
-# snapshot fields narrowed to int32 on device (host keeps 64-bit authority)
-_I32_FIELDS = frozenset({"version", "log_op", "log_hint", "log_vdelta"})
+__all__ = ["HoneycombStore", "StoreShard", "SyncStats",
+           "WIRE_ENTRY_OVERHEAD"]
 
 
-def _bucket(n: int) -> int:
-    """Round a delta length up to a power of two: bounded jit-cache growth
-    (one compile per bucket, not per distinct dirty count)."""
-    return 1 if n <= 1 else 1 << (n - 1).bit_length()
-
-
-@dataclasses.dataclass
-class SyncStats:
-    snapshots: int = 0            # exports that refreshed the device image
-    full_syncs: int = 0           # wholesale republishes
-    delta_syncs: int = 0          # incremental scatters
-    bytes_synced: int = 0         # host->device array traffic (both modes)
-    pagetable_commands: int = 0   # accumulated PCIe page-table updates
-    read_version_updates: int = 0  # accumulated PCIe read-version writes
-    delta_rows: int = 0           # dirty node rows scattered (cumulative)
-    delta_fraction: float = 0.0   # dirty fraction at the last sync
-
-
-class HoneycombStore:
-    def __init__(self, cfg: HoneycombConfig | None = None,
-                 heap_capacity: int = 1024):
-        self.cfg = cfg or HoneycombConfig()
-        self.tree = HoneycombTree(self.cfg, heap_capacity)
-        self.cache = InteriorCache(self.cfg)
-        self.sync_stats = SyncStats()
-        self._snapshot: TreeSnapshot | None = None
-        self._snapshot_dirty = True
-        self._writes_since_sync = 0
-        self._sync_deferred = False
-        # counter watermarks so multi-sync runs accumulate (not overwrite)
-        self._pt_commands_seen = 0
-        self._rv_updates_seen = 0
-        # array generations the resident snapshot was published against;
-        # growth changes shapes and forces a full republish
-        self._heap_gen = -1
-        self._pt_gen = -1
-
-    # ------------------------------------------------------------- writes
-    def put(self, key: bytes, value: bytes, thread: int = 0):
-        self.tree.put(key, value, thread)
-        self._note_write()
-
-    def update(self, key: bytes, value: bytes, thread: int = 0):
-        self.tree.update(key, value, thread)
-        self._note_write()
-
-    def delete(self, key: bytes, thread: int = 0):
-        self.tree.delete(key, thread)
-        self._note_write()
-
-    def _note_write(self):
-        self._snapshot_dirty = True
-        self._writes_since_sync += 1
-        if (self.cfg.sync_policy == "every_k"
-                and self._writes_since_sync >= self.cfg.sync_every_k
-                and not self._sync_deferred):
-            self.export_snapshot()
-
-    @contextlib.contextmanager
-    def deferred_sync(self):
-        """Suspend automatic policy syncs ("every_k") for a write burst the
-        caller will close with ONE batched sync (scheduler.run)."""
-        self._sync_deferred = True
-        try:
-            yield
-        finally:
-            self._sync_deferred = False
-
-    # ---------------------------------------------------- host-side reads
-    def get(self, key: bytes) -> bytes | None:
-        return self.tree.get(key)
-
-    def scan(self, lo: bytes, hi: bytes, max_items: int | None = None):
-        return self.tree.scan(lo, hi, max_items)
-
-    # ------------------------------------------------- snapshot mechanics
-    def export_snapshot(self, force: bool = False,
-                        full: bool = False) -> TreeSnapshot:
-        """Host -> accelerator sync (the PCIe analogue).
-
-        After the first wholesale publish, only dirty node rows + batched
-        page-table commands + the read version cross the "bus"; ``full=True``
-        forces a wholesale republish (benchmarks use it to meter the
-        non-amortized traffic), ``force=True`` re-exports even when clean."""
-        if (self._snapshot is not None and not self._snapshot_dirty
-                and not force and not full):
-            return self._snapshot
-        t = self.tree
-        h = t.heap
-        stats = self.sync_stats
-        # accumulate command counters as deltas: multi-sync runs must report
-        # total traffic, not the last sync's snapshot of the counters
-        stats.pagetable_commands += t.pt.sync_commands - self._pt_commands_seen
-        self._pt_commands_seen = t.pt.sync_commands
-        stats.read_version_updates += (t.versions.device_updates
-                                       - self._rv_updates_seen)
-        self._rv_updates_seen = t.versions.device_updates
-        stats.snapshots += 1
-
-        dirty = h.dirty
-        frac = len(dirty) / h.capacity
-        can_delta = (self._snapshot is not None and not full
-                     and self._heap_gen == h.generation
-                     and self._pt_gen == t.pt.generation
-                     and frac <= self.cfg.delta_full_threshold)
-        if can_delta:
-            snap = self._publish_delta(np.fromiter(sorted(dirty), np.int32,
-                                                   len(dirty)))
-            stats.delta_syncs += 1
-            stats.delta_rows += len(dirty)
-            stats.delta_fraction = frac
-        else:
-            snap = self._publish_full()
-            stats.full_syncs += 1
-            stats.delta_fraction = 1.0
-        dirty.clear()
-        self._heap_gen = h.generation
-        self._pt_gen = t.pt.generation
-        self.cache.refresh(t)
-        self._snapshot = snap
-        self._snapshot_dirty = False
-        self._writes_since_sync = 0
-        return snap
-
-    def _publish_full(self) -> TreeSnapshot:
-        """Wholesale republish: every heap array crosses the bus."""
-        t = self.tree
-        h = t.heap
-        pt_image = t.pt.flush_to_device()
-
-        def dev(a, dtype=None):
-            # ALWAYS copy: jnp.asarray is typically zero-copy on the CPU
-            # backend, and an aliased snapshot would see in-place host
-            # mutations (log appends, GC wipes) — the snapshot must be the
-            # immutable device image the paper's DMA produces
-            arr = np.asarray(a)
-            arr = arr.astype(dtype) if dtype is not None else arr.copy()
-            self.sync_stats.bytes_synced += arr.nbytes
-            return jnp.asarray(arr)
-
-        return TreeSnapshot(
-            ntype=dev(h.ntype), nitems=dev(h.nitems),
-            version=dev(h.version, np.int32), oldptr=dev(h.oldptr),
-            left_child=dev(h.left_child), lsib=dev(h.lsib), rsib=dev(h.rsib),
-            skeys=dev(h.skeys), skeylen=dev(h.skeylen),
-            svals=dev(h.svals), svallen=dev(h.svallen),
-            n_shortcuts=dev(h.n_shortcuts), sc_keys=dev(h.sc_keys),
-            sc_keylen=dev(h.sc_keylen), sc_pos=dev(h.sc_pos),
-            nlog=dev(h.nlog), log_keys=dev(h.log_keys),
-            log_keylen=dev(h.log_keylen), log_vals=dev(h.log_vals),
-            log_vallen=dev(h.log_vallen), log_op=dev(h.log_op, np.int32),
-            log_backptr=dev(h.log_backptr),
-            log_hint=dev(h.log_hint, np.int32),
-            log_vdelta=dev(h.log_vdelta, np.int32),
-            pagetable=dev(pt_image),
-            root_lid=jnp.int32(t.root_lid),
-            read_version=jnp.int32(t.versions.read_version()),
-        )
-
-    def _publish_delta(self, rows: np.ndarray) -> TreeSnapshot:
-        """Incremental sync: scatter dirty node rows and pending page-table
-        commands into the resident device snapshot.  Transfers (and meters)
-        O(dirty) bytes instead of O(store)."""
-        t = self.tree
-        h = t.heap
-        pt_lids, pt_phys = t.pt.take_pending()
-        # pad to bucketed sizes with idempotent repeats (duplicate indices
-        # carry identical data); when empty, row/lid 0 rewrites itself with
-        # its current contents (clean rows match the device image)
-        rows_p = self._pad_index(rows, _bucket(len(rows)))
-        lids_p = self._pad_index(pt_lids, _bucket(len(pt_lids)))
-        phys_p = t.pt.device_image[lids_p]
-        nbytes = pt_lids.nbytes + pt_phys.nbytes
-        fields = {}
-        for f in NODE_FIELDS:
-            arr = getattr(h, f)[rows_p]
-            if f in _I32_FIELDS:
-                arr = arr.astype(np.int32)
-            if len(rows_p):
-                nbytes += arr.nbytes // len(rows_p) * len(rows)
-            fields[f] = jnp.asarray(arr)
-        self.sync_stats.bytes_synced += nbytes
-        delta = SnapshotDelta(
-            rows=jnp.asarray(rows_p),
-            pt_lids=jnp.asarray(lids_p), pt_phys=jnp.asarray(phys_p),
-            root_lid=jnp.int32(t.root_lid),
-            read_version=jnp.int32(t.versions.read_version()),
-            **fields)
-        return _jit_apply_delta(self._snapshot, delta)
-
-    @staticmethod
-    def _pad_index(idx: np.ndarray, size: int) -> np.ndarray:
-        idx = np.asarray(idx, np.int32)
-        if len(idx) == 0:
-            return np.zeros(size, np.int32)
-        return np.concatenate(
-            [idx, np.full(size - len(idx), idx[-1], np.int32)])
-
-    # ------------------------------------------------- accelerated reads
-    def _snapshot_for_read(self) -> TreeSnapshot:
-        """The snapshot device batches execute against.  "explicit" policy
-        reads the resident (possibly stale, always consistent) snapshot;
-        the other policies sync lazily here."""
-        if self.cfg.sync_policy == "explicit" and self._snapshot is not None:
-            return self._snapshot
-        return self.export_snapshot()
-
-    def get_batch(self, keys: Sequence[bytes]) -> list[bytes | None]:
-        """Batched GET on the accelerator path, epoch-stamped."""
-        snap = self._snapshot_for_read()
-        lanes, lens = pack_keys(list(keys), self.cfg.key_words)
-        lo, hi = self.tree.epochs.accel_begin_batch(len(keys))
-        try:
-            res: GetResult = _jit_get(
-                snap, jnp.asarray(lanes), jnp.asarray(lens), cfg=self.cfg)
-            found = np.asarray(res.found)
-            vals = np.asarray(res.vals)
-            vlens = np.asarray(res.vallens)
-        finally:
-            self.tree.epochs.accel_complete_batch(lo, hi)
-        out: list[bytes | None] = []
-        for i in range(len(keys)):
-            if not found[i]:
-                out.append(None)
-            else:
-                out.append(self._decode_value(vals[i], int(vlens[i])))
-        return out
-
-    def scan_batch(self, ranges: Sequence[tuple[bytes, bytes]]
-                   ) -> list[list[tuple[bytes, bytes]]]:
-        """Batched SCAN on the accelerator path.  Requests the device path
-        could not complete (leaf budget/slots) fall back to the host — the
-        paper likewise executes some SCANs on CPU cores (Section 6.3)."""
-        snap = self._snapshot_for_read()
-        lo_l, lo_n = pack_keys([r[0] for r in ranges], self.cfg.key_words)
-        hi_l, hi_n = pack_keys([r[1] for r in ranges], self.cfg.key_words)
-        slo, shi = self.tree.epochs.accel_begin_batch(len(ranges))
-        try:
-            res: ScanResult = _jit_scan(
-                snap, jnp.asarray(lo_l), jnp.asarray(lo_n),
-                jnp.asarray(hi_l), jnp.asarray(hi_n), cfg=self.cfg)
-            count = np.asarray(res.count)
-            keys = np.asarray(res.keys)
-            klens = np.asarray(res.keylens)
-            vals = np.asarray(res.vals)
-            vlens = np.asarray(res.vallens)
-            trunc = np.asarray(res.truncated)
-        finally:
-            self.tree.epochs.accel_complete_batch(slo, shi)
-        out = []
-        for b, (lo, hi) in enumerate(ranges):
-            if trunc[b]:
-                out.append(self.tree.scan(lo, hi))   # host fallback
-                continue
-            items = []
-            for j in range(int(count[b])):
-                k = keys[b, j].astype(">u4").tobytes()[: int(klens[b, j])]
-                items.append((k, self._decode_value(vals[b, j],
-                                                    int(vlens[b, j]))))
-            out.append(items)
-        return out
-
-    def _decode_value(self, lanes: np.ndarray, length: int) -> bytes:
-        if length <= self.cfg.max_inline_val_bytes:
-            return lanes.astype(">u4").tobytes()[:length]
-        return self.tree.overflow.read(int(lanes[0]))
-
-    # ------------------------------------------------------------- misc
-    def collect_garbage(self) -> int:
-        return self.tree.gc.collect()
-
-    @property
-    def stats(self):
-        return self.tree.stats
+class HoneycombStore(StoreShard):
+    """The paper's single-NIC deployment: one ``StoreShard`` owning the
+    entire keyspace.  See the class and module docs in core/shard.py for
+    the snapshot/delta-sync semantics."""

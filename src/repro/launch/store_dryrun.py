@@ -5,13 +5,22 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 batched read path (GET/SCAN) compiled for the 16x16 mesh as a range-sharded
 store service.
 
-Deployment model (the standard scale-out for ordered stores, and the same
-split the paper's cluster would use): the keyspace is range-sharded across
-all 256 chips — each chip owns a complete Honeycomb tree for its range
-(~128M/256 = 500k items for the paper's store) and serves its slice of the
-request batch; the router (serving layer) pre-partitions requests by range,
-so the read path itself is collective-free.  Expressed as a shard_map over
-(data, model) with per-shard snapshots.
+Deployment model — the LIVE ``ShardedHoneycombStore`` (core/router.py), at
+mesh scale: the keyspace is range-sharded across all 256 chips — each chip
+owns a complete Honeycomb tree for its range (~128M/256 = 500k items for the
+paper's store) and serves its slice of the request batch; the router
+(serving layer) pre-partitions requests by range, so the read path itself is
+collective-free.  Expressed as a shard_map over (data, model) with per-shard
+snapshots.
+
+Two halves keep the abstract model honest:
+  * the compile analysis sizes ONE shard's snapshot/delta with the same
+    per-shard item count the router's uniform boundaries produce, and
+    lowers the read path + delta application for the full mesh;
+  * ``live_sharded_smoke()`` drives a small live ShardedHoneycombStore
+    through the identical shape (range partition, per-shard delta sync,
+    cross-shard scan stitching) and reports per-shard sync traffic and
+    router load imbalance — the measured twin of the modeled numbers.
 
 Usage: PYTHONPATH=src python -m repro.launch.store_dryrun
 """
@@ -25,7 +34,9 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core import HoneycombConfig
+from repro.core import (HoneycombConfig, ShardedHoneycombStore,
+                        uniform_int_boundaries)
+from repro.core.keys import int_key
 from repro.core.read_path import (NODE_FIELDS, SnapshotDelta, TreeSnapshot,
                                   apply_snapshot_delta, batched_get,
                                   batched_scan)
@@ -35,7 +46,8 @@ from repro.launch.mesh import make_production_mesh
 
 def abstract_snapshot(cfg: HoneycombConfig, n_items: int, shards: int):
     """ShapeDtypeStructs for one shard's tree (paper store: 128M items,
-    55% leaf occupancy, 8KB-equivalent nodes)."""
+    55% leaf occupancy, 8KB-equivalent nodes).  Shard sizing matches the
+    live router's uniform range partition (n_items // shards items each)."""
     items_per_shard = n_items // shards
     leaves = math.ceil(items_per_shard / (cfg.node_cap * 0.55))
     interior = math.ceil(leaves / (cfg.node_cap * 0.55)) + 8
@@ -107,6 +119,46 @@ def delta_sync_analysis(cfg: HoneycombConfig, snap_abs: TreeSnapshot,
     }
 
 
+def live_sharded_smoke(shards: int = 4, n_items: int = 1024,
+                       batch: int = 64) -> dict:
+    """Drive a small LIVE ShardedHoneycombStore through the dry-run's
+    deployment shape: uniform range partition, per-shard resident snapshots
+    and delta syncs, router-split GET batches, cross-shard SCAN stitching.
+    Returns the measured per-shard sync traffic and load imbalance that the
+    mesh-scale compile analysis only models."""
+    cfg = HoneycombConfig()
+    st = ShardedHoneycombStore(
+        cfg, heap_capacity=1024, shards=shards,
+        boundaries=uniform_int_boundaries(n_items, shards))
+    rng = np.random.default_rng(11)
+    for i in rng.permutation(n_items):
+        st.put(int_key(int(i)), b"v" * 12)
+    st.export_snapshot()                     # resident snapshot per shard
+    # router-split GET batch + one scan spanning every shard
+    keys = [int_key(int(k)) for k in rng.integers(0, n_items, batch)]
+    st.get_batch(keys)
+    span = st.scan_batch([(int_key(1), int_key(n_items - 2))])[0]
+    # write burst confined to one shard -> exactly one delta sync
+    snaps0 = [s.snapshots for s in st.per_shard_sync_stats]
+    lo_shard = n_items // shards
+    for k in range(batch):
+        st.update(int_key(k % lo_shard), b"u" * 12)
+    st.export_snapshot()
+    dirty = [s.snapshots - b for s, b in zip(st.per_shard_sync_stats, snaps0)]
+    agg = st.sync_stats
+    return {
+        "shards": shards, "items": n_items,
+        "cross_shard_scan_items": len(span),
+        "per_shard_bytes_synced": [s.bytes_synced
+                                   for s in st.per_shard_sync_stats],
+        "per_shard_delta_syncs": [s.delta_syncs
+                                  for s in st.per_shard_sync_stats],
+        "dirty_shard_syncs_after_confined_burst": dirty,
+        "log_wire_bytes": agg.log_wire_bytes,
+        "load_imbalance": st.load_imbalance,
+    }
+
+
 def main(batch_per_shard: int = 512, n_items: int = 128_000_000):
     cfg = HoneycombConfig()   # paper geometry: 64-cap nodes, 8 shortcuts
     mesh = make_production_mesh(multi_pod=False)
@@ -164,6 +216,7 @@ def main(batch_per_shard: int = 512, n_items: int = 128_000_000):
         "reads_per_s_per_chip_bound": (
             batch_per_shard / max(rl.memory_s, rl.compute_s, 1e-12)),
         "delta_sync": delta_sync_analysis(cfg, snap_abs),
+        "live_sharded_store": live_sharded_smoke(),
     }
     print(json.dumps(out, indent=1))
     p = Path("experiments/store_dryrun.json")
