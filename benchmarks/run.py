@@ -6,7 +6,10 @@ artifacts are the relative trends and the analytic byte model — see
 benchmarks/common.py and EXPERIMENTS.md.
 
 ``--shards 1,4`` sweeps the shard axis for the sections that serve the live
-range-sharded store (YCSB, cloud-storage).
+range-sharded store (YCSB, cloud-storage).  ``--pipeline serial,pipelined``
+sweeps the scheduler's epoch-pipeline modes for the sections that drive it
+(YCSB, latency), reporting pipelined-vs-serial throughput and sync-stall
+time.  ``--tiny`` shrinks every section's workload for CI smoke runs.
 """
 from __future__ import annotations
 
@@ -33,22 +36,42 @@ SECTIONS = [
 ]
 
 
+# --tiny workload overrides, applied to any section parameter they name
+TINY = {"n_items": 512, "n_ops": 192, "reps": 2}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("only", nargs="?", default=None,
-                    help="run only sections whose name contains this")
+                    help="run only sections whose name contains one of "
+                         "these comma-separated substrings")
     ap.add_argument("--shards", default="1",
                     help="comma-separated shard counts for the sharded "
                          "sections (e.g. 1,4)")
+    ap.add_argument("--pipeline", default="",
+                    help="comma-separated scheduler pipeline modes to sweep "
+                         "(e.g. serial,pipelined); empty skips the axis")
+    ap.add_argument("--tiny", action="store_true",
+                    help="shrink workloads to smoke-test sizes (CI)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero if any requested section errored "
+                         "(CI gates on this; the default keeps sweeping)")
     args = ap.parse_args()
     shards = tuple(int(s) for s in args.shards.split(","))
+    pipeline = tuple(m for m in args.pipeline.split(",") if m)
+    only = tuple(t for t in (args.only or "").split(",") if t)
     results = {}
     for name, fn in SECTIONS:
-        if args.only and args.only not in name:
+        if only and not any(tok in name for tok in only):
             continue
+        params = inspect.signature(fn).parameters
         kwargs = {}
-        if "shards" in inspect.signature(fn).parameters:
+        if "shards" in params:
             kwargs["shards"] = shards
+        if "pipeline" in params:
+            kwargs["pipeline"] = pipeline
+        if args.tiny:
+            kwargs.update({k: v for k, v in TINY.items() if k in params})
         print(f"# --- {name} ---", flush=True)
         t0 = time.perf_counter()
         try:
@@ -61,6 +84,10 @@ def main() -> None:
     out.parent.mkdir(exist_ok=True)
     out.write_text(json.dumps(results, indent=1, default=str))
     print(f"# results -> {out}")
+    errored = [n for n, r in results.items()
+               if isinstance(r, dict) and "error" in r]
+    if args.strict and errored:
+        raise SystemExit(f"sections errored: {', '.join(errored)}")
 
 
 if __name__ == "__main__":

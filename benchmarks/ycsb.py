@@ -8,11 +8,17 @@ Shards are a sweep axis: the same workloads drive the live range-sharded
 ``ShardedHoneycombStore`` (the paper's Section 7 scale-out shape), with
 per-shard sync bytes/op and router load imbalance metered alongside the
 single-device numbers.
+
+Pipeline is a second axis (``--pipeline serial,pipelined``): the same
+workloads drive the scheduler's epoch pipeline in each mode, reporting
+pipelined-vs-serial throughput and the sync-stall-time meter (serial
+blocks on the sync barrier every epoch; pipelined overlaps the standby
+scatters with read dispatch — see core/pipeline.py).
 """
 from __future__ import annotations
 
 from .common import (TDP_BASELINE_W, TDP_HONEYCOMB_W, build_stores, emit,
-                     run_mixed, uniform_sampler, zipf_sampler)
+                     run_mixed, run_scheduled, uniform_sampler, zipf_sampler)
 
 WORKLOADS = {
     "A": dict(read_frac=0.5, scan_items=0),
@@ -25,7 +31,8 @@ WORKLOADS = {
 
 
 def run(n_items: int = 4096, n_ops: int = 2048,
-        shards: tuple[int, ...] = (1,)) -> dict:
+        shards: tuple[int, ...] = (1,),
+        pipeline: tuple[str, ...] = ()) -> dict:
     results = {}
     for ns in shards if isinstance(shards, (tuple, list)) else (shards,):
         hc, cp = build_stores(n_items, shards=ns)
@@ -54,8 +61,24 @@ def run(n_items: int = 4096, n_ops: int = 2048,
                      f"wire_B={sync['log_wire_bytes']} "
                      f"deltas={sync['delta_syncs']}/{sync['snapshots']} "
                      f"pt_cmds={sync['pagetable_commands']}{extra}")
+        # pipeline axis: scheduler-driven epochs, serial vs pipelined, on
+        # a write-heavy and a scan-heavy point (A, E) where the sync
+        # barrier matters most
+        for mode in pipeline:
+            for wl in ("A", "E"):
+                hp, _ = build_stores(n_items, shards=ns, baseline=False)
+                r = run_scheduled(hp, uniform_sampler(n_items, seed=3),
+                                  n_ops=n_ops, n_items=n_items,
+                                  pipeline=mode, **WORKLOADS[wl])
+                results[f"{wl}/pipeline{tag}/{mode}"] = r
+                emit(f"ycsb_{wl}{tag.replace('/', '_')}_{mode}",
+                     1e6 / r["ops_per_s"],
+                     f"stall_s={r['sync_stall_s']:.3f} "
+                     f"stall_frac={r['stall_fraction']:.2f} "
+                     f"syncs={r['syncs']} epochs={r['epochs']} "
+                     f"occ={r['lane_occupancy']:.2f}")
     return results
 
 
 if __name__ == "__main__":
-    run(shards=(1, 4))
+    run(shards=(1, 4), pipeline=("serial", "pipelined"))

@@ -3,6 +3,9 @@
 #
 #   scripts/verify.sh          # fast gate: everything not marked slow
 #   scripts/verify.sh --all    # full suite, including slow tests
+#   scripts/verify.sh --smoke  # pipelined benchmark smoke only (tiny
+#                              # sizes): serial-vs-pipelined YCSB+latency,
+#                              # results land in experiments/bench_results.json
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -10,5 +13,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 if [[ "${1:-}" == "--all" ]]; then
     exec python -m pytest -x -q
+fi
+if [[ "${1:-}" == "--smoke" ]]; then
+    exec python -m benchmarks.run fig10_ycsb,fig12_latency --tiny \
+        --pipeline serial,pipelined --strict
 fi
 exec python -m pytest -x -q -m "not slow"

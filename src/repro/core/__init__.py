@@ -1,6 +1,8 @@
 """Honeycomb core: the paper's contribution as a composable JAX module."""
-from .config import HoneycombConfig, DEFAULT_CONFIG, ShardingConfig
+from .config import (HoneycombConfig, DEFAULT_CONFIG, ShardingConfig,
+                     bucket_pow2)
 from .btree import HoneycombTree
+from .pipeline import PIPELINE_MODES, PipelineStats
 from .shard import StoreShard
 from .store import HoneycombStore, SyncStats
 from .router import ShardedHoneycombStore, uniform_int_boundaries
@@ -13,7 +15,8 @@ from .cache import InteriorCache
 __all__ = [
     "HoneycombConfig", "DEFAULT_CONFIG", "ShardingConfig", "HoneycombTree",
     "HoneycombStore", "StoreShard", "ShardedHoneycombStore",
-    "uniform_int_boundaries",
+    "uniform_int_boundaries", "bucket_pow2",
+    "PIPELINE_MODES", "PipelineStats",
     "TreeSnapshot", "SnapshotDelta", "ScanResult", "GetResult",
     "apply_snapshot_delta", "batched_get", "batched_scan",
     "descend", "log_sort_positions", "OutOfOrderScheduler", "Request",

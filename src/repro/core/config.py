@@ -22,6 +22,18 @@ from __future__ import annotations
 import dataclasses
 
 
+def bucket_pow2(n: int) -> int:
+    """Round a batch/delta length up to a power of two (1 for n <= 1).
+
+    THE shared bucket schedule for everything padded before a jitted
+    device call — read batches (core/shard.py), delta row/page-table
+    vectors (core/shard.py), and the scheduler's lane-occupancy meters —
+    so the jit cache grows one compile per bucket, not per distinct
+    length.  The schedule is pinned by tests/test_pipeline_engine.py.
+    """
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
 @dataclasses.dataclass(frozen=True)
 class HoneycombConfig:
     # --- node geometry -----------------------------------------------------

@@ -10,7 +10,11 @@ snapshot, incremental delta sync and ``SyncStats`` — behind the same
 router in front:
 
   * writes route to the owning shard; each shard syncs independently (a
-    write burst confined to one shard delta-syncs only that shard).
+    write burst confined to one shard delta-syncs only that shard), and
+    under the epoch pipeline (core/pipeline.py) each dirty shard STAGES its
+    delta into a standby buffer (``begin_export``) and FLIPS independently
+    (``flip``) — per-stage timing/occupancy meters are exposed as
+    ``pipeline_stats`` alongside the aggregated ``SyncStats``.
   * ``get_batch`` splits by owning shard and dispatches one dense device
     batch per shard; responses scatter back to arrival order.
   * cross-shard SCANs decompose into per-shard sub-ranges — sub-range s >
@@ -39,6 +43,7 @@ from typing import Sequence
 from .btree import TreeStats
 from .config import HoneycombConfig, ShardingConfig
 from .keys import int_key
+from .pipeline import PipelineStats
 from .shard import StoreShard, SyncStats
 
 
@@ -156,6 +161,21 @@ class ShardedHoneycombStore:
         return [sh.export_snapshot(force=force, full=full)
                 for sh in self.shards]
 
+    def begin_export(self, force: bool = False,
+                     full: bool = False) -> list[int]:
+        """Pipelined sync, staging half: enqueue every DIRTY shard's delta
+        scatter into its standby buffer (asynchronous — active snapshots
+        keep answering untouched).  Returns the staged shard ids."""
+        return [i for i, sh in enumerate(self.shards)
+                if sh.begin_export(force=force, full=full)]
+
+    def flip(self):
+        """Pipelined sync, publish half: flip every shard with a staged
+        standby — each shard advances its epoch INDEPENDENTLY (a clean
+        shard's active snapshot and epoch are untouched).  Returns the
+        per-shard snapshot list."""
+        return [sh.flip() for sh in self.shards]
+
     # ------------------------------------------------- accelerated reads
     def get_batch(self, keys: Sequence[bytes]) -> list[bytes | None]:
         """Batched GET: split by owning shard, one dense device batch per
@@ -229,6 +249,21 @@ class ShardedHoneycombStore:
     @property
     def per_shard_sync_stats(self) -> list[SyncStats]:
         return [sh.sync_stats for sh in self.shards]
+
+    @property
+    def pipeline_stats(self) -> PipelineStats:
+        """Aggregate per-stage pipeline meters across shards (staging wall
+        time, staged exports, flips)."""
+        agg = PipelineStats()
+        for sh in self.shards:
+            agg.merge(sh.pipeline_stats)
+        return agg
+
+    @property
+    def per_shard_epochs(self) -> list[int]:
+        """Snapshot epoch (flip count) per shard — dirty shards advance
+        independently."""
+        return [sh.epoch for sh in self.shards]
 
     @property
     def stats(self) -> TreeStats:

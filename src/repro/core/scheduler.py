@@ -1,5 +1,5 @@
-"""Request scheduling: out-of-order, shard-aware batch composition
-(paper Section 4.1, lifted to the sharded serving stack).
+"""Request scheduling: out-of-order, shard-aware, epoch-pipelined batch
+composition (paper Sections 4.1 and 3-4, lifted to the sharded stack).
 
 The FPGA avoids head-of-line blocking by letting requests complete out of
 order.  In SPMD execution the whole batch advances in lock step, so the
@@ -10,16 +10,33 @@ one expensive lane nor scattered across device snapshots, and responses are
 re-ordered back to arrival order on completion: out-of-order execution with
 in-order delivery, exactly the accelerator's contract.
 
-Writes are first-class requests too.  One ``run()`` performs the sharded
-serving stack's full cycle:
+Writes are first-class requests too.  One ``run()`` performs the serving
+stack's full cycle as three EXPLICIT pipeline stages (the design doc lives
+in core/pipeline.py):
 
-  1. apply every pending write host-side, in submission order, routed to
-     its owning shard (automatic per-shard policy syncs deferred);
-  2. ONE host->device delta sync per DIRTY shard — the paper's batched
-     synchronization (Sections 3-4), per device;
-  3. dispatch dense per-shard read batches (``ready_batches()`` is the
-     single source of dispatch order — run() consumes it, so the two can
-     never disagree).
+  1. ``stage_admit``   — apply every pending write host-side, in submission
+     order, routed to its owning shard (automatic per-shard policy syncs
+     deferred for the burst);
+  2. ``stage_export``  — ONE host->device delta sync per DIRTY shard — the
+     paper's batched synchronization, per device;
+  3. ``stage_dispatch`` — dense per-shard read batches
+     (``ready_batches()`` is the single source of dispatch order — run()
+     consumes it, so the two can never disagree).
+
+``pipeline`` selects how the stages compose:
+
+  * ``"serial"`` (default) — the pre-pipeline sequence, op-for-op: one
+    facade ``export_snapshot()`` covering every dirty shard, then reads.
+    The blocking PCIe barrier the serial design implies is modeled with
+    ``jax.block_until_ready`` on the synced snapshots and metered as
+    ``stats.sync_stall_s``.
+  * ``"pipelined"`` — double-buffered epochs: every dirty shard's delta is
+    STAGED into its standby buffer (asynchronous scatter enqueue), each
+    shard flips independently, and read batches dispatch immediately —
+    shard A's reads execute while shard B's scatter is still in the device
+    queue, and consecutive ``run()`` epochs overlap because nothing ever
+    blocks.  Results and sync byte counts are identical to serial mode by
+    construction (reads always execute against the flipped epoch).
 
 Bucketing by shard requires a routing function: pass
 ``shard_of=router.shard_for_key`` when driving a ``ShardedHoneycombStore``;
@@ -29,10 +46,17 @@ behaviour exactly.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import defaultdict
 from typing import Any, Callable, Iterable, Sequence
 
+import jax
+
+from .pipeline import PIPELINE_MODES, PipelineStats
+
 WRITE_KINDS = ("put", "update", "delete")
+
+_now = time.perf_counter
 
 
 @dataclasses.dataclass
@@ -47,14 +71,19 @@ class Request:
 
 class OutOfOrderScheduler:
     """Buckets read requests by (shard, kind, cost class), queues writes in
-    order, dispatches dense per-shard batches, reassembles responses in
-    arrival order."""
+    order, runs the admit/export/dispatch pipeline stages, reassembles
+    responses in arrival order."""
 
     def __init__(self, batch_size: int = 256,
                  cost_classes: Sequence[int] = (1, 4, 16, 64),
-                 shard_of: Callable[[bytes], int] | None = None):
+                 shard_of: Callable[[bytes], int] | None = None,
+                 pipeline: str = "serial"):
+        assert pipeline in PIPELINE_MODES, (
+            f"unknown pipeline mode {pipeline!r} (one of {PIPELINE_MODES})")
         self.batch_size = batch_size
         self.cost_classes = tuple(sorted(cost_classes))
+        self.pipeline = pipeline
+        self.stats = PipelineStats()
         # routing function key -> owning shard; SCANs bucket by their lo key
         # (the store facade still decomposes any cross-shard tail)
         self._shard_of = shard_of or (lambda key: 0)
@@ -97,11 +126,13 @@ class OutOfOrderScheduler:
                 del reqs[: self.batch_size]
                 yield kind, batch
 
-    def _apply_writes(self, store) -> dict[int, Any]:
-        """Host-side write phase: every queued write in submission order,
-        routed by the store facade, no device sync in between (that is the
-        whole point) — each shard's own "every_k" policy is deferred for
-        the duration of the burst."""
+    # -------------------------------------------------------------- stages
+    def stage_admit(self, store) -> dict[int, Any]:
+        """Stage 1 — host-side write phase: every queued write in submission
+        order, routed by the store facade, no device sync in between (that
+        is the whole point) — each shard's own "every_k" policy is deferred
+        for the duration of the burst."""
+        t0 = _now()
         out: dict[int, Any] = {}
         with store.deferred_sync():
             for r in self._writes:
@@ -114,21 +145,46 @@ class OutOfOrderScheduler:
                 out[r.rid] = None
         self.applied_writes += len(self._writes)
         self._writes.clear()
+        self.stats.admit_s += _now() - t0
         return out
 
-    def run(self, store, flush: bool = True) -> dict[int, Any]:
-        """Drive all pending requests through the store: writes first (in
-        order), one batched sync per dirty shard, then the batched read
-        paths.  Returns {rid: response} with in-order semantics per request
-        id."""
-        out = self._apply_writes(store)
-        if out:
-            # ONE sync per dirty shard covers the whole write burst — the
-            # paper's batched PCIe synchronization (delta export scales
-            # with the burst); clean shards are untouched
-            before = store.sync_stats.snapshots
-            store.export_snapshot()
-            self.syncs += store.sync_stats.snapshots - before
+    def stage_export(self, store) -> None:
+        """Stage 2 — one delta sync per DIRTY shard, covering the whole
+        write burst (the paper's batched PCIe synchronization; clean shards
+        are untouched).
+
+        Serial mode exports and publishes through the facade's
+        ``export_snapshot()`` and then BLOCKS until the scatters complete
+        (the modeled sync barrier: reads may not be issued until the DMA is
+        done); the wait is metered as ``sync_stall_s``.  Pipelined mode
+        stages every dirty shard's standby buffer — the scatters are only
+        ENQUEUED — and flips each shard independently; read batches dispatch
+        while the scatters drain, so the only stall is host staging time."""
+        before = store.sync_stats.snapshots
+        t0 = _now()
+        if self.pipeline == "serial":
+            snaps = store.export_snapshot()
+            jax.block_until_ready(snaps)
+        else:
+            store.begin_export()
+            store.flip()
+        dt = _now() - t0
+        self.stats.sync_stall_s += dt   # no reads dispatched yet this epoch
+        self.stats.export_s += dt
+        self.syncs += store.sync_stats.snapshots - before
+
+    def stage_dispatch(self, store, flush: bool = True) -> dict[int, Any]:
+        """Stage 3 — consume ``ready_batches()``: dense, shard- and
+        cost-homogeneous device batches, responses reassembled to arrival
+        order.  Device-lane occupancy is accumulated from the STORE's
+        meters (the shard is where ``bucket_pow2`` padding actually
+        happens, including the router's per-shard sub-batches and floor
+        back-fill probes), so it reflects real device lanes, not the
+        scheduler-level batch sizes."""
+        t0 = _now()
+        ps = store.pipeline_stats
+        lanes0, padded0 = ps.dispatched_lanes, ps.padded_lanes
+        out: dict[int, Any] = {}
         for kind, batch in self.ready_batches(flush=flush):
             self.dispatched_batches += 1
             self.dispatched_requests += len(batch)
@@ -138,4 +194,20 @@ class OutOfOrderScheduler:
                 res = store.scan_batch([(r.key, r.hi) for r in batch])
             for r, v in zip(batch, res):
                 out[r.rid] = v
+        ps = store.pipeline_stats
+        self.stats.dispatched_lanes += ps.dispatched_lanes - lanes0
+        self.stats.padded_lanes += ps.padded_lanes - padded0
+        self.stats.dispatch_s += _now() - t0
+        return out
+
+    def run(self, store, flush: bool = True) -> dict[int, Any]:
+        """Drive all pending requests through the store: one full pipeline
+        epoch — admit writes (in order), sync each dirty shard, dispatch the
+        batched read paths.  Returns {rid: response} with in-order semantics
+        per request id."""
+        out = self.stage_admit(store)
+        if out:
+            self.stage_export(store)
+        out.update(self.stage_dispatch(store, flush=flush))
+        self.stats.runs += 1
         return out

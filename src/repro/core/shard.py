@@ -2,15 +2,24 @@
 
 This is the per-device unit the sharded serving stack is built from: a host
 B+Tree writer (``HoneycombTree``), the MVCC/epoch machinery, an interior
-cache, and the accelerator read path, all bound to ONE resident device
-snapshot kept in sync by the incremental delta subsystem:
+cache, and the accelerator read path, all bound to a DOUBLE-BUFFERED
+resident device snapshot kept in sync by the incremental delta subsystem
+(see core/pipeline.py for the pipeline design):
 
-  * ``export_snapshot()`` — the host->accelerator synchronization point (the
-    PCIe DMA + page-table command analogue).  The first export publishes the
-    packed heap arrays wholesale; afterwards only *dirty node rows* plus the
-    batched page-table commands and the read version are scattered into the
-    resident snapshot, so sync traffic scales with write volume, not store
-    size.  ``SyncStats`` meters both modes, plus a log-entry *wire-format*
+  * ``begin_export()`` / ``flip()`` — the two halves of the
+    host->accelerator synchronization point (the PCIe DMA + page-table
+    command analogue).  ``begin_export`` *stages*: the first export
+    publishes the packed heap arrays wholesale; afterwards only *dirty
+    node rows* plus the batched page-table commands and the read version
+    are scattered — asynchronously — into the STANDBY buffer, so sync
+    traffic scales with write volume, not store size, and in-flight read
+    batches keep answering from the untouched active snapshot.  ``flip``
+    *publishes*: an atomic epoch advance that makes the standby active
+    (``epoch`` counts flips); old-epoch snapshots are functional device
+    copies and keep answering at their pinned read version.
+  * ``export_snapshot()`` ≡ ``begin_export(); flip()`` — the serial
+    composition, byte-for-byte what the pre-pipeline code did.
+    ``SyncStats`` meters both sync modes, plus a log-entry *wire-format*
     estimate (key+value+op per write) so benchmarks can compare dirty-row
     accounting against the paper's append-only log-block encoding.
   * ``cfg.sync_policy`` — when the sync happens: lazily before device reads
@@ -33,6 +42,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import functools
+import time
 from typing import Sequence
 
 import jax
@@ -41,8 +51,9 @@ import numpy as np
 
 from .btree import HoneycombTree
 from .cache import InteriorCache
-from .config import HoneycombConfig
+from .config import HoneycombConfig, bucket_pow2
 from .keys import pack_keys
+from .pipeline import PipelineStats
 from .read_path import (NODE_FIELDS, GetResult, ScanResult, SnapshotDelta,
                         TreeSnapshot, apply_snapshot_delta, batched_get,
                         batched_scan)
@@ -53,8 +64,11 @@ from .read_path import (NODE_FIELDS, GetResult, ScanResult, SnapshotDelta,
 _jit_get = jax.jit(batched_get, static_argnames="cfg")
 _jit_scan = jax.jit(batched_scan, static_argnames="cfg")
 # the delta-sync scatter; NOT donated — old snapshots held by in-flight
-# batches must keep answering at their read version
-_jit_apply_delta = jax.jit(apply_snapshot_delta)
+# batches must keep answering at their read version.  On TPU the node-field
+# scatters fuse into ONE Pallas multi-field kernel call; elsewhere the jnp
+# oracle path lowers through XLA (kernels/ops.py dispatch).
+_DELTA_BACKEND = "pallas" if jax.default_backend() == "tpu" else None
+_jit_apply_delta = jax.jit(apply_snapshot_delta, static_argnames="backend")
 
 # snapshot fields narrowed to int32 on device (host keeps 64-bit authority)
 _I32_FIELDS = frozenset({"version", "log_op", "log_hint", "log_vdelta"})
@@ -63,11 +77,7 @@ _I32_FIELDS = frozenset({"version", "log_op", "log_hint", "log_vdelta"})
 # length per entry (key/value bytes are added on top)
 WIRE_ENTRY_OVERHEAD = 5
 
-
-def _bucket(n: int) -> int:
-    """Round a delta length up to a power of two: bounded jit-cache growth
-    (one compile per bucket, not per distinct dirty count)."""
-    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+_now = time.perf_counter
 
 
 @dataclasses.dataclass
@@ -123,6 +133,13 @@ class StoreShard:
         # host fallbacks stay linearizable with the stale device image
         self._snapshot_rv: int | None = None
         self._snapshot_pin: tuple[int, int] | None = None
+        # double-buffered snapshot: begin_export() stages the next epoch
+        # into the standby buffer (async scatter); flip() publishes it
+        self.epoch = 0                    # flips published so far
+        self.pipeline_stats = PipelineStats()
+        self._standby: TreeSnapshot | None = None
+        self._standby_rv: int | None = None
+        self._standby_pin: tuple[int, int] | None = None
 
     # ------------------------------------------------------------- writes
     def put(self, key: bytes, value: bytes, thread: int = 0):
@@ -166,17 +183,21 @@ class StoreShard:
         return self.tree.scan(lo, hi, max_items)
 
     # ------------------------------------------------- snapshot mechanics
-    def export_snapshot(self, force: bool = False,
-                        full: bool = False) -> TreeSnapshot:
-        """Host -> accelerator sync (the PCIe analogue).
+    def begin_export(self, force: bool = False, full: bool = False) -> bool:
+        """Stage the host->accelerator sync into the STANDBY buffer (the
+        async half of the PCIe analogue).
 
         After the first wholesale publish, only dirty node rows + batched
         page-table commands + the read version cross the "bus"; ``full=True``
         forces a wholesale republish (benchmarks use it to meter the
-        non-amortized traffic), ``force=True`` re-exports even when clean."""
-        if (self._snapshot is not None and not self._snapshot_dirty
-                and not force and not full):
-            return self._snapshot
+        non-amortized traffic), ``force=True`` re-stages even when clean.
+        The scatter is enqueued asynchronously; the ACTIVE snapshot keeps
+        answering in-flight reads untouched until ``flip()`` publishes the
+        standby.  Returns True when a standby was (re)staged."""
+        if ((self._snapshot is not None or self._standby is not None)
+                and not self._snapshot_dirty and not force and not full):
+            return False   # clean, and some epoch (staged or active) exists
+        t0 = _now()
         t = self.tree
         h = t.heap
         stats = self.sync_stats
@@ -189,14 +210,18 @@ class StoreShard:
         self._rv_updates_seen = t.versions.device_updates
         stats.snapshots += 1
 
+        # an unflipped standby accumulates further deltas; otherwise the
+        # active snapshot is the scatter base
+        base = self._standby if self._standby is not None else self._snapshot
         dirty = h.dirty
         frac = len(dirty) / h.capacity
-        can_delta = (self._snapshot is not None and not full
+        can_delta = (base is not None and not full
                      and self._heap_gen == h.generation
                      and self._pt_gen == t.pt.generation
                      and frac <= self.cfg.delta_full_threshold)
         if can_delta:
-            snap = self._publish_delta(np.fromiter(sorted(dirty), np.int32,
+            snap = self._publish_delta(base,
+                                       np.fromiter(sorted(dirty), np.int32,
                                                    len(dirty)))
             stats.delta_syncs += 1
             stats.delta_rows += len(dirty)
@@ -208,21 +233,54 @@ class StoreShard:
         dirty.clear()
         self._heap_gen = h.generation
         self._pt_gen = t.pt.generation
-        self.cache.refresh(t)
-        self._snapshot = snap
         self._snapshot_dirty = False
         self._writes_since_sync = 0
-        self._snapshot_rv = int(snap.read_version)
-        if self.cfg.sync_policy == "explicit":
-            # pin an accelerator epoch for the (possibly long-lived) stale
-            # snapshot: garbage deferred from here on stays unreclaimed, so
-            # host fallbacks can still walk version chains back to
-            # _snapshot_rv; the pin rolls forward at the next export
-            old_pin = self._snapshot_pin
-            self._snapshot_pin = t.epochs.accel_begin_batch(1)
-            if old_pin is not None:
-                t.epochs.accel_complete_batch(*old_pin)
-        return snap
+        self._standby = snap
+        # the interior-cache update rides along with the sync DMA (staging
+        # time, when tree state == standby contents); a flip never touches
+        # it, so the cache always mirrors the newest staged epoch
+        self.cache.refresh(t)
+        # captured host-side (never block on the device scalar): the read
+        # version the standby will answer at once flipped
+        self._standby_rv = int(t.versions.read_version())
+        if self.cfg.sync_policy == "explicit" and self._standby_pin is None:
+            # pin an accelerator epoch NOW, while the staged read version is
+            # current: garbage deferred from here on stays unreclaimed, so
+            # after the flip host fallbacks can still walk version chains
+            # back to the standby's read version even if writes landed in
+            # the staging window; the pin rolls forward at the next flip
+            self._standby_pin = t.epochs.accel_begin_batch(1)
+        self.pipeline_stats.staged_exports += 1
+        self.pipeline_stats.export_s += _now() - t0
+        return True
+
+    def flip(self) -> TreeSnapshot | None:
+        """Publish the staged standby as the active snapshot — the atomic
+        epoch advance of the double buffer.  Old-epoch snapshots are
+        functional device copies, so batches already in flight finish at
+        their pinned read version.  No-op when nothing is staged."""
+        if self._standby is None:
+            return self._snapshot
+        self._snapshot = self._standby
+        self._snapshot_rv = self._standby_rv
+        self._standby = None
+        self._standby_rv = None
+        self.epoch += 1
+        self.pipeline_stats.flips += 1
+        old_pin = self._snapshot_pin
+        self._snapshot_pin = self._standby_pin
+        self._standby_pin = None
+        if old_pin is not None:
+            self.tree.epochs.accel_complete_batch(*old_pin)
+        return self._snapshot
+
+    def export_snapshot(self, force: bool = False,
+                        full: bool = False) -> TreeSnapshot:
+        """Host -> accelerator sync (the PCIe analogue): stage + publish in
+        one step — ``begin_export()`` then ``flip()``.  Identical, including
+        sync byte counts, to the pre-double-buffer serial behavior."""
+        self.begin_export(force=force, full=full)
+        return self.flip()   # no-op returning the active snapshot if clean
 
     def _publish_full(self) -> TreeSnapshot:
         """Wholesale republish: every heap array crosses the bus."""
@@ -259,18 +317,22 @@ class StoreShard:
             read_version=jnp.int32(t.versions.read_version()),
         )
 
-    def _publish_delta(self, rows: np.ndarray) -> TreeSnapshot:
+    def _publish_delta(self, base: TreeSnapshot,
+                       rows: np.ndarray) -> TreeSnapshot:
         """Incremental sync: scatter dirty node rows and pending page-table
-        commands into the resident device snapshot.  Transfers (and meters)
-        O(dirty) bytes instead of O(store)."""
+        commands over ``base`` (the standby-in-progress, or the active
+        snapshot when none is staged).  Transfers (and meters) O(dirty)
+        bytes instead of O(store); the host-side gathers below copy out of
+        the heap eagerly, so later host mutations/GC wipes can never reach
+        a staged standby."""
         t = self.tree
         h = t.heap
         pt_lids, pt_phys = t.pt.take_pending()
         # pad to bucketed sizes with idempotent repeats (duplicate indices
         # carry identical data); when empty, row/lid 0 rewrites itself with
         # its current contents (clean rows match the device image)
-        rows_p = self._pad_index(rows, _bucket(len(rows)))
-        lids_p = self._pad_index(pt_lids, _bucket(len(pt_lids)))
+        rows_p = self._pad_index(rows, bucket_pow2(len(rows)))
+        lids_p = self._pad_index(pt_lids, bucket_pow2(len(pt_lids)))
         phys_p = t.pt.device_image[lids_p]
         nbytes = pt_lids.nbytes + pt_phys.nbytes
         fields = {}
@@ -288,7 +350,7 @@ class StoreShard:
             root_lid=jnp.int32(t.root_lid),
             read_version=jnp.int32(t.versions.read_version()),
             **fields)
-        return _jit_apply_delta(self._snapshot, delta)
+        return _jit_apply_delta(base, delta, backend=_DELTA_BACKEND)
 
     @staticmethod
     def _pad_index(idx: np.ndarray, size: int) -> np.ndarray:
@@ -325,7 +387,9 @@ class StoreShard:
         snap = self._snapshot_for_read()
         # pad ragged batches (router sub-batches) to power-of-two buckets so
         # each (cfg, shapes) compiles once per bucket, not per length
-        padded = keys + [keys[0]] * (_bucket(len(keys)) - len(keys))
+        padded = keys + [keys[0]] * (bucket_pow2(len(keys)) - len(keys))
+        self.pipeline_stats.dispatched_lanes += len(keys)
+        self.pipeline_stats.padded_lanes += len(padded)
         lanes, lens = pack_keys(padded, self.cfg.key_words)
         lo, hi = self.tree.epochs.accel_begin_batch(len(keys))
         try:
@@ -355,8 +419,10 @@ class StoreShard:
         if not ranges:
             return []
         snap = self._snapshot_for_read()
-        pad = [ranges[0]] * (_bucket(len(ranges)) - len(ranges))
+        pad = [ranges[0]] * (bucket_pow2(len(ranges)) - len(ranges))
         padded = ranges + pad
+        self.pipeline_stats.dispatched_lanes += len(ranges)
+        self.pipeline_stats.padded_lanes += len(padded)
         lo_l, lo_n = pack_keys([r[0] for r in padded], self.cfg.key_words)
         hi_l, hi_n = pack_keys([r[1] for r in padded], self.cfg.key_words)
         slo, shi = self.tree.epochs.accel_begin_batch(len(ranges))

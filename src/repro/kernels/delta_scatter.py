@@ -12,13 +12,19 @@ the output BlockSpec can address row ``rows[i]`` before the body runs.  The
 destination is aliased to the output (``input_output_aliases``), so
 untouched rows keep their contents without any copy.
 
-Caveats (why ``ops.snapshot_delta_scatter`` defaults to the jnp ref off-TPU):
-  * scalar per-row fields flatten to W=1 blocks, far below the 128-lane
-    tile — fine for a correctness stub, wasteful on real hardware (a
-    production kernel would fuse all fields of a row into one 8 KB DMA,
-    exactly the paper's node-buffer transfer unit);
-  * duplicate rows must carry identical data (the store pads deltas with
-    repeats), which keeps the scatter order-free.
+Two kernels:
+  * ``snapshot_delta_scatter`` — one flattened field per call (the original
+    correctness stub; scalar fields flatten to W=1 blocks, far below the
+    128-lane tile).
+  * ``snapshot_multi_scatter`` — ALL fields of a dirty row in ONE
+    ``pallas_call``: each field is its own aliased operand/output pair and
+    the grid body DMAs every field's row in the same iteration.  This is
+    the paper's node-buffer transfer unit (the whole ~8 KB node crosses in
+    one DMA) and the kernel the store's delta sync dispatches on TPU — one
+    invocation per sync, not one per field.
+
+Shared caveat: duplicate rows must carry identical data (the store pads
+deltas with repeats), which keeps the scatters order-free.
 """
 from __future__ import annotations
 
@@ -60,3 +66,58 @@ def snapshot_delta_scatter(dst, rows, upd, *, interpret: bool = False):
         input_output_aliases={2: 0},   # dst (arg 2, after rows & upd) -> out
         interpret=interpret,
     )(rows, upd, dst)
+
+
+def _multi_scatter_kernel(nf: int):
+    """Kernel body for ``nf`` fused fields: refs arrive as
+    (rows, upd_0..upd_{nf-1}, dst_0..dst_{nf-1}, out_0..out_{nf-1});
+    every field's update row DMAs over its aliased output row."""
+    def kernel(rows_ref, *refs):
+        del rows_ref  # drives the out index maps; dsts are aliased
+        upd = refs[:nf]
+        out = refs[2 * nf:]
+        for f in range(nf):
+            out[f][...] = upd[f][...]
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def snapshot_multi_scatter(dsts, rows, upd, *, interpret: bool = False):
+    """Fused dirty-row scatter: dsts[f][rows[i], :] = upd[f][i, :] for every
+    field f, in ONE kernel invocation (the paper's whole-node DMA).
+
+    dsts: sequence of [S, W_f] resident device arrays (trailing dims
+          flattened by the caller; dtypes may differ per field)
+    rows: [D] int32 target rows (repeats allowed with identical data)
+    upd:  matching sequence of [D, W_f] replacement rows
+
+    Returns the new field arrays in input order.  The grid iterates over
+    update rows with ``rows`` scalar-prefetched; each destination is
+    aliased to its output, so untouched rows keep their contents without
+    any copy and the whole sync costs one kernel launch.
+    """
+    dsts, upd = tuple(dsts), tuple(upd)
+    nf = len(dsts)
+    D = upd[0].shape[0]
+
+    def upd_spec(w):
+        return pl.BlockSpec((1, w), lambda i, rows: (i, 0))
+
+    def out_spec(w):
+        return pl.BlockSpec((1, w), lambda i, rows: (rows[i], 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(D,),
+        in_specs=[upd_spec(u.shape[1]) for u in upd]
+        + [pl.BlockSpec(memory_space=pltpu.ANY)] * nf,
+        out_specs=[out_spec(d.shape[1]) for d in dsts],
+    )
+    return pl.pallas_call(
+        _multi_scatter_kernel(nf),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(d.shape, d.dtype) for d in dsts],
+        # dst f is argument 1 + nf + f (after rows and the nf update blocks)
+        input_output_aliases={1 + nf + f: f for f in range(nf)},
+        interpret=interpret,
+    )(rows, *upd, *dsts)

@@ -57,6 +57,22 @@ def snapshot_delta_scatter(dst, rows, upd, backend: str | None = None, **kw):
                                       **kw)
 
 
+def snapshot_multi_scatter(dsts, rows, upd, backend: str | None = None,
+                           **kw):
+    """Apply one delta sync's dirty rows to EVERY per-node field of the
+    resident snapshot in a single fused kernel invocation (the paper's
+    whole-node DMA).  ``dsts``/``upd`` are matching sequences of
+    [S, W_f]/[D, W_f] arrays with trailing dims flattened; see
+    ``repro.core.read_path.apply_snapshot_delta`` for the store wiring and
+    the jnp oracle kept as the parity reference."""
+    backend = backend or default_backend()
+    if backend == "ref":
+        return _ref.snapshot_multi_scatter_ref(dsts, rows, upd)
+    return _ds.snapshot_multi_scatter(dsts, rows, upd,
+                                      interpret=(backend == "interpret"),
+                                      **kw)
+
+
 def paged_attention(q, k_pages, v_pages, block_tables, seq_lens,
                     start_pos=None, backend: str | None = None, **kw):
     backend = backend or default_backend()

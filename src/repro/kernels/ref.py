@@ -46,6 +46,13 @@ def snapshot_delta_scatter_ref(dst, rows, upd):
     return dst.at[rows].set(upd)
 
 
+def snapshot_multi_scatter_ref(dsts, rows, upd):
+    """Fused multi-field scatter oracle: one row-scatter per field, same
+    contract as ``delta_scatter.snapshot_multi_scatter`` (the parity
+    reference for the one-invocation-per-sync fused kernel)."""
+    return tuple(d.at[rows].set(u) for d, u in zip(dsts, upd))
+
+
 def paged_attention_ref(q, k_pages, v_pages, block_tables, seq_lens,
                         start_pos=None, *, scale: float | None = None,
                         softcap: float = 0.0):

@@ -17,8 +17,13 @@ Two halves keep the abstract model honest:
   * the compile analysis sizes ONE shard's snapshot/delta with the same
     per-shard item count the router's uniform boundaries produce, and
     lowers the read path + delta application for the full mesh;
+    ``pipeline_occupancy_model()`` lowers the two pipeline stages (standby
+    delta scatter, batched read) separately and models the epoch pipeline
+    of core/pipeline.py — serial epoch = export + dispatch, pipelined
+    epoch = max(stage), with per-stage occupancy;
   * ``live_sharded_smoke()`` drives a small live ShardedHoneycombStore
-    through the identical shape (range partition, per-shard delta sync,
+    through the identical shape (range partition, per-shard delta sync
+    plus one pipelined scheduler epoch with independent per-shard flips,
     cross-shard scan stitching) and reports per-shard sync traffic and
     router load imbalance — the measured twin of the modeled numbers.
 
@@ -34,8 +39,8 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core import (HoneycombConfig, ShardedHoneycombStore,
-                        uniform_int_boundaries)
+from repro.core import (HoneycombConfig, OutOfOrderScheduler,
+                        ShardedHoneycombStore, uniform_int_boundaries)
 from repro.core.keys import int_key
 from repro.core.read_path import (NODE_FIELDS, SnapshotDelta, TreeSnapshot,
                                   apply_snapshot_delta, batched_get,
@@ -119,6 +124,45 @@ def delta_sync_analysis(cfg: HoneycombConfig, snap_abs: TreeSnapshot,
     }
 
 
+def pipeline_occupancy_model(cfg: HoneycombConfig, snap_abs: TreeSnapshot,
+                             batch_per_shard: int = 512,
+                             dirty_rows: int = 256,
+                             pt_commands: int = 64) -> dict:
+    """Compile model of the epoch pipeline (core/pipeline.py): lower ONE
+    shard's two device stages — the standby delta scatter (export) and the
+    batched GET (dispatch) — and derive what double-buffering buys.
+
+    A serial epoch pays export + dispatch back-to-back (the sync barrier);
+    a pipelined epoch pays max(export, dispatch) once the pipe fills,
+    because shard A's reads execute while shard B's scatter drains.  Stage
+    occupancy is each stage's share of the bottleneck stage."""
+    delta_abs = abstract_delta(cfg, snap_abs, dirty_rows, pt_commands)
+    no_coll = {"total_bytes": 0}
+    c_exp = jax.jit(apply_snapshot_delta) \
+        .lower(snap_abs, delta_abs).compile()
+    export_rl = hla.roofline(c_exp.cost_analysis(), no_coll, 0.0)
+    sds = jax.ShapeDtypeStruct
+    keys = sds((batch_per_shard, cfg.key_words), jnp.uint32)
+    lens = sds((batch_per_shard,), jnp.int32)
+    c_get = jax.jit(batched_get, static_argnames="cfg") \
+        .lower(snap_abs, keys, lens, cfg=cfg).compile()
+    read_rl = hla.roofline(c_get.cost_analysis(), no_coll, 0.0)
+    export_s = max(export_rl.compute_s, export_rl.memory_s)
+    read_s = max(read_rl.compute_s, read_rl.memory_s)
+    serial_s = export_s + read_s
+    pipelined_s = max(export_s, read_s)
+    bottleneck = pipelined_s or 1e-30
+    return {
+        "dirty_rows": dirty_rows, "batch_per_shard": batch_per_shard,
+        "export_stage_s": export_s, "read_stage_s": read_s,
+        "serial_epoch_s": serial_s, "pipelined_epoch_s": pipelined_s,
+        "pipeline_speedup": serial_s / bottleneck,
+        "stage_occupancy": {"export": export_s / bottleneck,
+                            "read": read_s / bottleneck},
+        "bottleneck_stage": "export" if export_s >= read_s else "read",
+    }
+
+
 def live_sharded_smoke(shards: int = 4, n_items: int = 1024,
                        batch: int = 64) -> dict:
     """Drive a small LIVE ShardedHoneycombStore through the dry-run's
@@ -145,7 +189,19 @@ def live_sharded_smoke(shards: int = 4, n_items: int = 1024,
         st.update(int_key(k % lo_shard), b"u" * 12)
     st.export_snapshot()
     dirty = [s.snapshots - b for s, b in zip(st.per_shard_sync_stats, snaps0)]
+    # one pipelined scheduler epoch: staged standby scatters + independent
+    # per-shard flips + immediate read dispatch (measured twin of
+    # pipeline_occupancy_model)
+    sched = OutOfOrderScheduler(batch_size=batch,
+                                shard_of=st.shard_for_key,
+                                pipeline="pipelined")
+    for k in range(batch):
+        sched.submit("update", int_key(int(rng.integers(0, n_items))),
+                     value=b"p" * 12)
+        sched.submit("get", int_key(int(rng.integers(0, n_items))))
+    sched.run(st)
     agg = st.sync_stats
+    ps = st.pipeline_stats
     return {
         "shards": shards, "items": n_items,
         "cross_shard_scan_items": len(span),
@@ -156,6 +212,12 @@ def live_sharded_smoke(shards: int = 4, n_items: int = 1024,
         "dirty_shard_syncs_after_confined_burst": dirty,
         "log_wire_bytes": agg.log_wire_bytes,
         "load_imbalance": st.load_imbalance,
+        "pipelined_epoch": {
+            "per_shard_epochs": st.per_shard_epochs,
+            "staged_exports": ps.staged_exports, "flips": ps.flips,
+            "sync_stall_s": sched.stats.sync_stall_s,
+            "lane_occupancy": sched.stats.lane_occupancy,
+        },
     }
 
 
@@ -216,6 +278,7 @@ def main(batch_per_shard: int = 512, n_items: int = 128_000_000):
         "reads_per_s_per_chip_bound": (
             batch_per_shard / max(rl.memory_s, rl.compute_s, 1e-12)),
         "delta_sync": delta_sync_analysis(cfg, snap_abs),
+        "pipeline": pipeline_occupancy_model(cfg, snap_abs, batch_per_shard),
         "live_sharded_store": live_sharded_smoke(),
     }
     print(json.dumps(out, indent=1))
