@@ -17,8 +17,8 @@ import numpy as np
 
 from repro.baselines.cpu_store import CpuOrderedStore
 from repro.core import (HoneycombConfig, HoneycombStore,
-                        OutOfOrderScheduler, ShardedHoneycombStore,
-                        uniform_int_boundaries)
+                        OutOfOrderScheduler, ReplicationConfig,
+                        ShardedHoneycombStore, uniform_int_boundaries)
 from repro.core.keys import int_key
 
 TDP_BASELINE_W = 127.0
@@ -49,20 +49,28 @@ def uniform_sampler(n: int, seed: int = 0):
 def build_stores(n_items: int = 8192, val_bytes: int = 16,
                  cfg: HoneycombConfig | None = None, seed: int = 0,
                  honeycomb: bool = True, baseline: bool = True,
-                 shards: int = 1):
+                 shards: int = 1, replicas: int = 1,
+                 replica_policy: str = "round_robin",
+                 force_router: bool = False):
     """Load both stores with the same random-order keys (paper: inserts are
     uniform random).  ``shards > 1`` builds the live range-sharded store
     (uniform split of the int-key space) instead of the single-device
-    facade — the sweep axis for the scale-out benchmarks."""
+    facade — the sweep axis for the scale-out benchmarks; ``replicas > 1``
+    adds follower replicas per shard with ``replica_policy`` read
+    spreading (the replication sweep axis).  ``force_router`` builds the
+    routed facade even at shards=1/replicas=1, so sweeps that include the
+    baseline point compare like against like."""
     rng = np.random.default_rng(seed)
     order = rng.permutation(n_items)
     val = bytes(val_bytes)
     if not honeycomb:
         hc = None
-    elif shards > 1:
+    elif shards > 1 or replicas > 1 or force_router:
         hc = ShardedHoneycombStore(
             cfg or HoneycombConfig(), shards=shards,
-            boundaries=uniform_int_boundaries(n_items, shards))
+            boundaries=uniform_int_boundaries(n_items, shards),
+            replication=ReplicationConfig(replicas=replicas,
+                                          policy=replica_policy))
     else:
         hc = HoneycombStore(cfg or HoneycombConfig())
     cp = CpuOrderedStore() if baseline else None
@@ -84,13 +92,17 @@ def sync_traffic(store) -> dict:
             "full_syncs": s.full_syncs, "delta_syncs": s.delta_syncs,
             "pagetable_commands": s.pagetable_commands,
             "read_version_updates": s.read_version_updates,
+            "log_entries": s.log_entries,
             "log_wire_bytes": s.log_wire_bytes,
+            # replica-amplification traffic (follower delta feed; 0 for the
+            # unreplicated store, which has no replication machinery)
+            "replication_bytes": getattr(store, "replication_bytes", 0),
             "delta_fraction": s.delta_fraction}
 
 
 _SYNC_DIFF_KEYS = ("bytes_synced", "snapshots", "full_syncs", "delta_syncs",
                    "pagetable_commands", "read_version_updates",
-                   "log_wire_bytes")
+                   "log_entries", "log_wire_bytes", "replication_bytes")
 
 
 def run_mixed(store, sampler, *, n_ops: int, read_frac: float,
@@ -162,8 +174,9 @@ def run_scheduled(store, sampler, *, n_ops: int, read_frac: float,
     overlaps the standby scatters with read dispatch."""
     start_sync = sync_traffic(store)
     shard_of = getattr(store, "shard_for_key", None)
+    replica_of = getattr(store, "replica_for_dispatch", None)
     sched = OutOfOrderScheduler(batch_size=batch, shard_of=shard_of,
-                                pipeline=pipeline)
+                                replica_of=replica_of, pipeline=pipeline)
     rng = np.random.default_rng(seed)
     reads = rng.random(n_ops) < read_frac
     keys = sampler(n_ops)

@@ -9,7 +9,12 @@ benchmarks/common.py and EXPERIMENTS.md.
 range-sharded store (YCSB, cloud-storage).  ``--pipeline serial,pipelined``
 sweeps the scheduler's epoch-pipeline modes for the sections that drive it
 (YCSB, latency), reporting pipelined-vs-serial throughput and sync-stall
-time.  ``--tiny`` shrinks every section's workload for CI smoke runs.
+time.  ``--replicas 1,2,4`` sweeps per-shard replica counts for the
+replicated read-spreading sections (YCSB), reporting the
+read-throughput-vs-replicas and sync-bytes-amplification curves.
+``--tiny`` shrinks every section's workload for CI smoke runs.  A summary
+table of every section's sync meters (log entries, wire bytes, sync bytes,
+replica amplification) prints after the sweep.
 """
 from __future__ import annotations
 
@@ -40,6 +45,33 @@ SECTIONS = [
 TINY = {"n_items": 512, "n_ops": 192, "reps": 2}
 
 
+def print_sync_summary(results: dict) -> None:
+    """One table of every benchmark run's sync meters: write log entries /
+    append-only wire bytes (the paper's log-block accounting), dirty-row
+    sync bytes, and the replication amplification bytes the follower delta
+    feed added on top — surfaced here so the traffic story is one screen,
+    not scattered across sections (log_block.py keeps the deep dive)."""
+    rows = []
+    for section, recs in results.items():
+        if not isinstance(recs, dict):
+            continue
+        for key, rec in recs.items():
+            sync = rec.get("sync") if isinstance(rec, dict) else None
+            if isinstance(sync, dict) and "log_wire_bytes" in sync:
+                rows.append((f"{section}/{key}",
+                             sync.get("log_entries", 0),
+                             sync["log_wire_bytes"],
+                             sync.get("bytes_synced", 0),
+                             sync.get("replication_bytes", 0)))
+    if not rows:
+        return
+    print("# --- sync traffic summary ---")
+    print(f"# {'run':<44} {'log_ents':>8} {'wire_B':>10} "
+          f"{'sync_B':>12} {'repl_B':>12}")
+    for name, ents, wire, synced, repl in rows:
+        print(f"# {name:<44} {ents:>8} {wire:>10} {synced:>12} {repl:>12}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("only", nargs="?", default=None,
@@ -51,6 +83,10 @@ def main() -> None:
     ap.add_argument("--pipeline", default="",
                     help="comma-separated scheduler pipeline modes to sweep "
                          "(e.g. serial,pipelined); empty skips the axis")
+    ap.add_argument("--replicas", default="",
+                    help="comma-separated per-shard replica counts for the "
+                         "read-spreading sections (e.g. 1,2,4); empty "
+                         "skips the axis")
     ap.add_argument("--tiny", action="store_true",
                     help="shrink workloads to smoke-test sizes (CI)")
     ap.add_argument("--strict", action="store_true",
@@ -59,6 +95,7 @@ def main() -> None:
     args = ap.parse_args()
     shards = tuple(int(s) for s in args.shards.split(","))
     pipeline = tuple(m for m in args.pipeline.split(",") if m)
+    replicas = tuple(int(r) for r in args.replicas.split(",") if r)
     only = tuple(t for t in (args.only or "").split(",") if t)
     results = {}
     for name, fn in SECTIONS:
@@ -70,6 +107,8 @@ def main() -> None:
             kwargs["shards"] = shards
         if "pipeline" in params:
             kwargs["pipeline"] = pipeline
+        if "replicas" in params:
+            kwargs["replicas"] = replicas
         if args.tiny:
             kwargs.update({k: v for k, v in TINY.items() if k in params})
         print(f"# --- {name} ---", flush=True)
@@ -80,6 +119,7 @@ def main() -> None:
             print(f"{name},0.00,ERROR:{type(e).__name__}:{e}")
             results[name] = {"error": str(e)}
         print(f"# {name} took {time.perf_counter() - t0:.1f}s", flush=True)
+    print_sync_summary(results)
     out = Path("experiments/bench_results.json")
     out.parent.mkdir(exist_ok=True)
     out.write_text(json.dumps(results, indent=1, default=str))

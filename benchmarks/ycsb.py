@@ -14,8 +14,17 @@ workloads drive the scheduler's epoch pipeline in each mode, reporting
 pipelined-vs-serial throughput and the sync-stall-time meter (serial
 blocks on the sync barrier every epoch; pipelined overlaps the standby
 scatters with read dispatch — see core/pipeline.py).
+
+Replicas are a third axis (``--replicas 1,2,4``): the read-heavy workloads
+(B, C — uniform and the zipfian skew where read spreading wins, per F2)
+drive the replicated store (core/replica.py) with round-robin read
+spreading, reporting the read-throughput-vs-replicas curve plus the
+sync-bytes-amplification curve (follower delta-feed bytes per op on top of
+the primary's sync traffic).
 """
 from __future__ import annotations
+
+from repro.core.keys import int_key
 
 from .common import (TDP_BASELINE_W, TDP_HONEYCOMB_W, build_stores, emit,
                      run_mixed, run_scheduled, uniform_sampler, zipf_sampler)
@@ -32,8 +41,54 @@ WORKLOADS = {
 
 def run(n_items: int = 4096, n_ops: int = 2048,
         shards: tuple[int, ...] = (1,),
-        pipeline: tuple[str, ...] = ()) -> dict:
+        pipeline: tuple[str, ...] = (),
+        replicas: tuple[int, ...] = ()) -> dict:
     results = {}
+    # replication axis: read-heavy workloads over growing replica sets —
+    # read throughput should scale with serving lanes while writes (and
+    # their delta feed) stay on the primary; the amplification meter is
+    # the cost side of that curve
+    warmed = not replicas
+    for nr in replicas:
+        # force_router: the replicas=1 baseline point runs the SAME routed
+        # facade as the replicated points, so the curve compares like
+        # against like
+        hr, _ = build_stores(n_items, shards=1, replicas=nr,
+                             replica_policy="round_robin", baseline=False,
+                             force_router=True)
+        if not warmed:
+            # pre-compile the read-path and delta-scatter jit buckets once
+            # (shapes are identical across replica counts) so compile time
+            # is not charged to the sweep's first point
+            for b in (1, 2, 4, 8, 16, 32, 64):
+                hr.get_batch([int_key(0)] * b)
+            for w in (4, 16, 48):
+                for i in range(w):
+                    hr.update(int_key(i), b"x" * 16)
+                hr.export_snapshot()
+            warmed = True
+        for wl, dist in (("C", "zipfian"), ("B", "zipfian"),
+                         ("B", "uniform")):
+            mk = zipf_sampler if dist == "zipfian" else uniform_sampler
+            lanes0 = [list(ops) for ops in hr.per_shard_replica_ops]
+            # smaller read bursts than the default so even tiny runs
+            # dispatch several batches — one policy pick per batch is what
+            # spreads the load over replica lanes
+            r = run_mixed(hr, mk(n_items, seed=3), n_ops=n_ops,
+                          n_items=n_items, batch=64, **WORKLOADS[wl])
+            sync = r["sync"]
+            amp = sync["replication_bytes"] / max(r["ops"], 1)
+            # THIS workload's per-lane spread (the store is reused, so the
+            # lifetime counters must be diffed per run)
+            lanes = [b - a for a, b in
+                     zip(lanes0[0], hr.per_shard_replica_ops[0])]
+            results[f"{wl}/{dist}/replicas{nr}"] = {
+                "honeycomb_ops_s": r["ops_per_s"], "replicas": nr,
+                "replica_ops": lanes, "sync": sync}
+            emit(f"ycsb_{wl}_{dist}_r{nr}", 1e6 / r["ops_per_s"],
+                 f"reads/s={r['ops_per_s']:.0f} replicas={nr} "
+                 f"repl_B/op={amp:.0f} sync_B/op={sync['bytes_per_op']:.0f} "
+                 f"lanes={lanes}")
     for ns in shards if isinstance(shards, (tuple, list)) else (shards,):
         hc, cp = build_stores(n_items, shards=ns)
         tag = "" if ns == 1 else f"/s{ns}"
@@ -81,4 +136,4 @@ def run(n_items: int = 4096, n_ops: int = 2048,
 
 
 if __name__ == "__main__":
-    run(shards=(1, 4), pipeline=("serial", "pipelined"))
+    run(shards=(1, 4), pipeline=("serial", "pipelined"), replicas=(1, 2, 4))

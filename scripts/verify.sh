@@ -3,8 +3,9 @@
 #
 #   scripts/verify.sh          # fast gate: everything not marked slow
 #   scripts/verify.sh --all    # full suite, including slow tests
-#   scripts/verify.sh --smoke  # pipelined benchmark smoke only (tiny
-#                              # sizes): serial-vs-pipelined YCSB+latency,
+#   scripts/verify.sh --smoke  # benchmark smoke only (tiny sizes):
+#                              # serial-vs-pipelined YCSB+latency plus a
+#                              # --replicas 1,2 read-spreading sweep;
 #                              # results land in experiments/bench_results.json
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -16,6 +17,6 @@ if [[ "${1:-}" == "--all" ]]; then
 fi
 if [[ "${1:-}" == "--smoke" ]]; then
     exec python -m benchmarks.run fig10_ycsb,fig12_latency --tiny \
-        --pipeline serial,pipelined --strict
+        --pipeline serial,pipelined --replicas 1,2 --strict
 fi
 exec python -m pytest -x -q -m "not slow"

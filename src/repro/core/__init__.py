@@ -1,11 +1,13 @@
 """Honeycomb core: the paper's contribution as a composable JAX module."""
-from .config import (HoneycombConfig, DEFAULT_CONFIG, ShardingConfig,
-                     bucket_pow2)
+from .config import (HoneycombConfig, DEFAULT_CONFIG, REPLICA_POLICIES,
+                     ReplicationConfig, ShardingConfig, bucket_pow2)
 from .btree import HoneycombTree
 from .pipeline import PIPELINE_MODES, PipelineStats
-from .shard import StoreShard
+from .shard import StagedSync, StoreShard
 from .store import HoneycombStore, SyncStats
-from .router import ShardedHoneycombStore, uniform_int_boundaries
+from .replica import FollowerReplica, ReplicaGroup
+from .router import (ShardedHoneycombStore, aggregate_stats,
+                     uniform_int_boundaries)
 from .read_path import (TreeSnapshot, SnapshotDelta, ScanResult, GetResult,
                         apply_snapshot_delta, batched_get, batched_scan,
                         descend, log_sort_positions)
@@ -13,8 +15,10 @@ from .scheduler import OutOfOrderScheduler, Request
 from .cache import InteriorCache
 
 __all__ = [
-    "HoneycombConfig", "DEFAULT_CONFIG", "ShardingConfig", "HoneycombTree",
-    "HoneycombStore", "StoreShard", "ShardedHoneycombStore",
+    "HoneycombConfig", "DEFAULT_CONFIG", "ShardingConfig",
+    "ReplicationConfig", "REPLICA_POLICIES", "HoneycombTree",
+    "HoneycombStore", "StoreShard", "StagedSync", "ShardedHoneycombStore",
+    "ReplicaGroup", "FollowerReplica", "aggregate_stats",
     "uniform_int_boundaries", "bucket_pow2",
     "PIPELINE_MODES", "PipelineStats",
     "TreeSnapshot", "SnapshotDelta", "ScanResult", "GetResult",

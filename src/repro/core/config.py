@@ -148,4 +148,35 @@ class ShardingConfig:
                 "shard boundaries must be strictly ascending")
 
 
+# read-spreading policies for replicated shards (core/replica.py):
+#   "primary_only" — every read serves from the primary (replication off the
+#                    read path; the replicas=1 equivalence baseline);
+#   "round_robin"  — dispatched read batches rotate over the replica set;
+#   "least_loaded" — each batch goes to the replica that has served the
+#                    fewest requests so far.
+REPLICA_POLICIES = ("primary_only", "round_robin", "least_loaded")
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicationConfig:
+    """Replica set for each shard of a ``ShardedHoneycombStore``.
+
+    ``replicas`` counts SERVING copies per shard (primary + followers), so
+    ``replicas=1`` means no followers — the configuration that is
+    operation-for-operation identical to the unreplicated store, including
+    sync byte counts (enforced by tests/test_replica.py).  Followers hold
+    their own device-resident snapshot fed only by the primary's delta
+    stream (core/replica.py); ``policy`` picks how the router spreads read
+    batches over the replica set (writes always go to the primary).
+    """
+    replicas: int = 1
+    policy: str = "primary_only"
+
+    def __post_init__(self):
+        assert self.replicas >= 1, "need at least the primary replica"
+        assert self.policy in REPLICA_POLICIES, (
+            f"unknown replica policy {self.policy!r} "
+            f"(one of {REPLICA_POLICIES})")
+
+
 DEFAULT_CONFIG = HoneycombConfig()

@@ -1,0 +1,324 @@
+"""Replication subsystem — follower shards fed by the primary's deltas.
+
+Honeycomb's export path already produces exactly the artifact a replica
+needs: a resident device snapshot plus an incremental delta stream (paper
+Sections 3-4).  Reads scale with accelerator lanes while writes stay on the
+CPU (Sections 3.4/5), so for the read-dominated workloads the paper targets
+the natural next scaling axis is to serve each range-shard from MORE THAN
+ONE device image and spread read batches over them — the same offload shape
+"Reliable Replication Protocols on SmartNICs" (Katebzadeh et al.) puts on
+the NIC data path, and exactly where F2 (Kanellis et al.) shows skewed
+read-heavy workloads win.
+
+Design
+======
+
+**FollowerReplica** — a device-resident copy of the primary's snapshot with
+its own buffers (its own device lane): an active image, a standby image,
+its own ``SyncStats`` and an epoch/read-version watermark.  A follower has
+NO tree of its own — it is fed exclusively by the primary's staged sync
+payloads (``StagedSync``, core/shard.py):
+
+  * a "delta" payload re-applies the primary's dirty-row + page-table
+    scatter onto the follower's own standby — a separate device scatter per
+    replica, so feeding N followers costs O(N x dirty_rows) bytes/work, not
+    O(N x store_size) (metered per replica, tested);
+  * a "full" payload (first export, heap growth, dirty fraction over the
+    delta threshold) device-copies the primary's staged standby;
+  * a follower that missed a payload (paused, attached late) is OUT OF
+    SYNC: deltas no longer apply to its base, so it catches up with a full
+    copy at the next staging (or ``resync_follower``), and until then its
+    published read version lags and the router never serves it.
+
+**ReplicaGroup** — one primary ``StoreShard`` plus N-1 followers behind the
+shard facade (attribute access falls through to the primary, so a group is
+drop-in wherever a shard was).  The group wires the primary's ``on_staged``
+/ ``on_flip`` hooks, so a replication round is exactly the epoch pipeline's
+sync: ``begin_export`` stages the SAME dirty-row + page-table delta into
+every follower's standby (each scatter an independently enqueued device
+op), and ``flip`` publishes the whole group — whichever path triggered it
+(facade export, scheduler stage_export, or an "every_k" policy auto-sync).
+
+**Freshness rule (no stale reads).**  Writes always go to the primary.  A
+dispatched read batch is pinned to a replica whose published read version
+covers the version the group currently serves (the primary's active
+snapshot read version — the scheduler's admitted read version after
+stage_export).  A lagging follower is SKIPPED — the batch silently serves
+from the primary instead (metered as ``lagging_skips``) — so spread reads
+are indistinguishable from primary reads: linearizable, never stale.
+``replica_lag_epochs`` / ``replica_staleness`` meter each follower's epoch
+and read-version lag.
+
+**Equivalence invariant (mirroring PR 2's shards=1 and PR 3's serial
+mode).**  ``replicas=1, policy="primary_only"`` is operation-for-operation
+identical to the unreplicated store, including sync byte counts: the
+follower list is empty, the hooks are no-ops, and every read delegates
+straight to the primary (enforced by tests/test_replica.py).
+
+The read-spreading POLICY (round_robin / least_loaded / primary_only)
+lives in the router (core/router.py, ``replica_for_dispatch``); the group
+only enforces freshness and executes the batch against the chosen image
+through the primary's dispatch machinery (``_device_get``/``_device_scan``
+— key packing, pow2 bucket padding, GC epoch pins, value decode).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .config import ReplicationConfig
+from .read_path import TreeSnapshot
+from .shard import (StagedSync, StoreShard, SyncStats, _DELTA_BACKEND,
+                    _jit_apply_delta)
+
+_now = time.perf_counter
+
+
+def _snapshot_nbytes(snap: TreeSnapshot) -> int:
+    return sum(x.nbytes for x in jax.tree.leaves(snap))
+
+
+class FollowerReplica:
+    """One follower's device-resident state: its own active/standby snapshot
+    buffers, SyncStats, and epoch/read-version watermark.  Fed only by the
+    primary's ``StagedSync`` payloads; never written directly."""
+
+    def __init__(self, replica_id: int, in_sync: bool = True):
+        self.replica_id = replica_id
+        self.sync_stats = SyncStats()
+        self.epoch = 0                 # primary epoch at our last publish
+        self.paused = False            # fault injection / maintenance
+        # True iff our scatter base equals the primary's scatter base, i.e.
+        # we applied every payload since the last full copy — only then may
+        # a delta payload be replayed here
+        self.in_sync = in_sync
+        self.snapshot: TreeSnapshot | None = None
+        self.snapshot_rv: int | None = None
+        self._standby: TreeSnapshot | None = None
+        self._standby_rv: int | None = None
+        self.served_ops = 0
+
+    def stage(self, payload: StagedSync) -> None:
+        """Replay one primary staging into our standby buffer: re-apply the
+        delta scatter on our own base when in sync, otherwise device-copy
+        the primary's staged standby (full catch-up)."""
+        base = self._standby if self._standby is not None else self.snapshot
+        stats = self.sync_stats
+        stats.snapshots += 1
+        if payload.kind == "delta" and self.in_sync and base is not None:
+            # independent device scatter per replica: O(dirty_rows) traffic
+            self._standby = _jit_apply_delta(base, payload.delta,
+                                             backend=_DELTA_BACKEND)
+            stats.delta_syncs += 1
+            stats.delta_rows += payload.delta_rows
+            stats.bytes_synced += payload.nbytes
+        else:
+            # full feed: first publish, primary full republish, or catch-up
+            # after a missed payload (a delta would land on the wrong base)
+            self._standby = jax.tree.map(jnp.copy, payload.snapshot)
+            stats.full_syncs += 1
+            stats.bytes_synced += (payload.nbytes if payload.kind == "full"
+                                   else _snapshot_nbytes(payload.snapshot))
+            self.in_sync = True
+        self._standby_rv = payload.read_version
+
+    def flip(self, primary_epoch: int) -> bool:
+        """Publish the staged standby; no-op when nothing is staged (the
+        follower keeps lagging and the router keeps skipping it)."""
+        if self._standby is None:
+            return False
+        self.snapshot = self._standby
+        self.snapshot_rv = self._standby_rv
+        self._standby = None
+        self._standby_rv = None
+        self.epoch = primary_epoch
+        return True
+
+
+class ReplicaGroup:
+    """One primary ``StoreShard`` plus N-1 ``FollowerReplica``s behind the
+    shard facade.  Writes and host reads hit the primary (attribute
+    fallthrough); device read batches can be pinned to any FRESH replica;
+    every sync staging/flip feeds the whole group."""
+
+    def __init__(self, primary: StoreShard,
+                 replication: ReplicationConfig | None = None):
+        self.primary = primary
+        self.replication = replication or ReplicationConfig()
+        fresh = (primary._snapshot is None and primary._standby is None)
+        self.followers = [FollowerReplica(i + 1, in_sync=fresh)
+                          for i in range(self.replication.replicas - 1)]
+        self.lagging_skips = 0         # batches redirected off a stale follower
+        self.replication_s = 0.0       # wall time spent feeding followers
+        self._primary_served = 0       # device requests the primary served
+        primary.on_staged = self._on_primary_staged
+        primary.on_flip = self._on_primary_flip
+        if not fresh and self.followers and primary._snapshot is not None:
+            for f in self.followers:   # late attach: full-copy the active
+                f.stage(StagedSync("full", primary._snapshot, None,
+                                   _snapshot_nbytes(primary._snapshot), 0,
+                                   primary._snapshot_rv))
+                f.flip(primary.epoch)
+                f.in_sync = primary._standby is None
+
+    def __getattr__(self, name: str):
+        # facade fallthrough: anything not replica-specific is the primary's
+        # (put/get/scan/deferred_sync/export_snapshot/sync_stats/tree/...)
+        if name == "primary" or name.startswith("__"):
+            raise AttributeError(name)
+        return getattr(self.primary, name)
+
+    @property
+    def n_replicas(self) -> int:
+        return 1 + len(self.followers)
+
+    # --------------------------------------------------- replication feed
+    def _on_primary_staged(self, payload: StagedSync) -> None:
+        """Stage the same delta into every follower's standby — one
+        independently enqueued device scatter per replica lane."""
+        t0 = _now()
+        for f in self.followers:
+            if f.paused:
+                f.in_sync = False      # missed payload: next feed is full
+                continue
+            f.stage(payload)
+        self.replication_s += _now() - t0
+
+    def _on_primary_flip(self) -> None:
+        """Publish the group: every follower with a staged standby flips to
+        the primary's new epoch; paused followers fall behind.  A follower
+        that missed an intermediate staging (in_sync False) must NOT
+        publish its older standby under the new epoch — its lag meters
+        would read caught-up while its content is stale — so it also waits
+        for the full catch-up feed."""
+        for f in self.followers:
+            if not f.paused and f.in_sync:
+                f.flip(self.primary.epoch)
+
+    # ------------------------------------------------- fault injection /
+    # lag control (tests, maintenance drains)
+    def pause_follower(self, replica: int) -> None:
+        self.followers[replica - 1].paused = True
+
+    def resume_follower(self, replica: int) -> None:
+        self.followers[replica - 1].paused = False
+
+    def resync_follower(self, replica: int) -> None:
+        """Immediate full catch-up from the primary's ACTIVE snapshot
+        (metered as a full sync); the follower serves again right away."""
+        f = self.followers[replica - 1]
+        snap = self.primary._snapshot
+        if snap is None:
+            return
+        f.snapshot = jax.tree.map(jnp.copy, snap)
+        f.snapshot_rv = self.primary._snapshot_rv
+        f._standby = None
+        f._standby_rv = None
+        f.epoch = self.primary.epoch
+        # deltas only resume if the primary has nothing staged mid-air
+        # (an unflipped standby is a base we did not copy)
+        f.in_sync = self.primary._standby is None
+        f.sync_stats.snapshots += 1
+        f.sync_stats.full_syncs += 1
+        f.sync_stats.bytes_synced += _snapshot_nbytes(snap)
+
+    # ------------------------------------------------- replica dispatch
+    def eligible_replicas(self) -> list[int]:
+        """Replica indices a read batch may be pinned to right now: the
+        primary always, plus every follower that is unpaused and whose
+        published read version covers the serving version.  The router's
+        spreading policies pick over this set so dead/lagging lanes are
+        routed around at pick time (the dispatch-time freshness check in
+        ``_serving_follower`` still backstops races)."""
+        return [0] + [i for i, f in enumerate(self.followers, start=1)
+                      if not f.paused and self._covers(f)]
+
+    def _covers(self, f: FollowerReplica) -> bool:
+        """Freshness rule: the follower's published read version must cover
+        what the group currently serves (the primary's active snapshot read
+        version) — otherwise a spread read could observe stale state."""
+        need = self.primary._snapshot_rv
+        return (f.snapshot is not None and need is not None
+                and f.snapshot_rv is not None and f.snapshot_rv >= need)
+
+    def _serving_follower(self, replica: int | None,
+                          n: int) -> FollowerReplica | None:
+        """Resolve a dispatch to a follower, or None for the primary —
+        enforcing the freshness rule (a lagging follower is skipped, the
+        batch serves from the primary, and the skip is metered)."""
+        if not replica or not self.followers:
+            self._primary_served += n
+            return None
+        if self.primary.cfg.sync_policy != "explicit":
+            # lazy-sync policies: freshen the whole group first, exactly as
+            # the primary's own read path would (no-op when clean)
+            self.primary.export_snapshot()
+        f = self.followers[(replica - 1) % len(self.followers)]
+        if not self._covers(f):
+            self.lagging_skips += 1
+            self._primary_served += n
+            return None
+        f.served_ops += n
+        return f
+
+    @property
+    def replica_ops(self) -> list[int]:
+        """Requests served per replica (primary first) — the least_loaded
+        policy's signal and the read-spread imbalance meter."""
+        return [self._primary_served] + [f.served_ops for f in self.followers]
+
+    def get_batch(self, keys, replica: int | None = None):
+        keys = list(keys)
+        if not keys:
+            return []
+        f = self._serving_follower(replica, len(keys))
+        if f is None:
+            return self.primary.get_batch(keys)
+        return self.primary._device_get(f.snapshot, keys)
+
+    def scan_batch(self, ranges, replica: int | None = None):
+        ranges = list(ranges)
+        if not ranges:
+            return []
+        f = self._serving_follower(replica, len(ranges))
+        if f is None:
+            return self.primary.scan_batch(ranges)
+        # eligibility pinned the follower at the primary snapshot's read
+        # version, so truncated-scan host fallbacks use the primary's rule
+        return self.primary._device_scan(f.snapshot, ranges,
+                                         self.primary._fallback_read_version())
+
+    # ------------------------------------------------------------- meters
+    @property
+    def replica_lag_epochs(self) -> list[int]:
+        """Per-follower epoch lag behind the primary (0 = fully caught up)."""
+        return [self.primary.epoch - f.epoch for f in self.followers]
+
+    @property
+    def replica_staleness(self) -> list[int]:
+        """Per-follower read-version lag behind the primary's published
+        snapshot (staleness in read-versions, 0 = serving-fresh)."""
+        need = self.primary._snapshot_rv
+        if need is None:
+            return [0] * len(self.followers)
+        return [need - (f.snapshot_rv if f.snapshot_rv is not None else 0)
+                for f in self.followers]
+
+    @property
+    def replication_stats(self) -> SyncStats:
+        """Aggregate follower SyncStats — the replication amplification the
+        delta feed generated on top of the primary's own sync traffic."""
+        from .router import aggregate_stats
+        return aggregate_stats((f.sync_stats for f in self.followers),
+                               SyncStats)
+
+    @property
+    def replication_bytes(self) -> int:
+        return sum(f.sync_stats.bytes_synced for f in self.followers)
+
+    @property
+    def per_replica_sync_stats(self) -> list[SyncStats]:
+        return ([self.primary.sync_stats]
+                + [f.sync_stats for f in self.followers])

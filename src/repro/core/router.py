@@ -27,11 +27,19 @@ router in front:
   * the read path is collective-free: no shard ever talks to another; the
     router stitches on the host, which is the serving-layer split the
     dry-run's roofline assumes.
+  * every shard slot is a ``ReplicaGroup`` (core/replica.py): one primary
+    plus the ``ReplicationConfig``-configured follower replicas, each a
+    device-resident snapshot fed only by the primary's delta stream.  The
+    router's read-spreading policy (``replica_for_dispatch``: primary_only /
+    round_robin / least_loaded) pins each dispatched GET/SCAN batch to a
+    replica; all writes go to the primary, and the group skips any follower
+    whose published read version lags the serving version (never stale).
 
 ``ShardedHoneycombStore(shards=1)`` is operation-for-operation equivalent to
 ``HoneycombStore`` — same results, same sync byte counts (enforced by
-tests/test_router.py) — so every higher layer can hold a single handle and
-scale by configuration.
+tests/test_router.py) — and likewise ``replicas=1, policy="primary_only"``
+is op-for-op the unreplicated store (tests/test_replica.py) — so every
+higher layer can hold a single handle and scale by configuration.
 """
 from __future__ import annotations
 
@@ -41,9 +49,10 @@ import dataclasses
 from typing import Sequence
 
 from .btree import TreeStats
-from .config import HoneycombConfig, ShardingConfig
+from .config import HoneycombConfig, ReplicationConfig, ShardingConfig
 from .keys import int_key
 from .pipeline import PipelineStats
+from .replica import ReplicaGroup
 from .shard import StoreShard, SyncStats
 
 
@@ -55,6 +64,26 @@ def uniform_int_boundaries(n_items: int, shards: int,
                  for i in range(1, shards))
 
 
+def aggregate_stats(parts, factory):
+    """Merge per-shard / per-replica stat objects into one ``factory()``.
+
+    THE aggregation helper for both the sync path (``SyncStats``,
+    ``PipelineStats`` — merged via their ``merge``) and the dispatch path
+    (``TreeStats`` — plain field sums); ``ReplicaGroup.replication_stats``
+    reuses it for follower aggregation, so every layer aggregates the same
+    way."""
+    agg = factory()
+    if hasattr(agg, "merge"):
+        for p in parts:
+            agg.merge(p)
+    else:
+        for p in parts:
+            for f in dataclasses.fields(agg):
+                setattr(agg, f.name,
+                        getattr(agg, f.name) + getattr(p, f.name))
+    return agg
+
+
 class ShardedHoneycombStore:
     """Range-sharded store: N independent ``StoreShard``s behind one
     facade, requests pre-partitioned by a router."""
@@ -62,7 +91,8 @@ class ShardedHoneycombStore:
     def __init__(self, cfg: HoneycombConfig | None = None,
                  heap_capacity: int = 1024,
                  shards: int | ShardingConfig = 1,
-                 boundaries: Sequence[bytes] | None = None):
+                 boundaries: Sequence[bytes] | None = None,
+                 replication: ReplicationConfig | None = None):
         self.cfg = cfg or HoneycombConfig()
         if isinstance(shards, ShardingConfig):
             sharding = shards
@@ -72,14 +102,29 @@ class ShardedHoneycombStore:
                 boundaries=tuple(boundaries) if boundaries is not None
                 else None)
         self.sharding = sharding
+        self.replication = replication or ReplicationConfig()
         n = sharding.shards
         if sharding.boundaries is not None:
             self.boundaries = list(sharding.boundaries)
         else:  # uniform split of the 8-byte integer keyspace
             self.boundaries = list(uniform_int_boundaries(2 ** 64, n))
-        self.shards = [StoreShard(self.cfg, heap_capacity, shard_id=i)
-                       for i in range(n)]
+        # every shard slot is a ReplicaGroup (pure primary delegation when
+        # replicas=1 — the tested op-for-op equivalence): one primary
+        # StoreShard plus the configured follower replicas
+        self.shards = [
+            ReplicaGroup(StoreShard(self.cfg, heap_capacity, shard_id=i),
+                         self.replication)
+            for i in range(n)]
         self.shard_ops = [0] * n    # routed requests per shard (imbalance)
+        # round_robin cursor PER SHARD: a shared cursor advanced once per
+        # shard inside a multi-shard batch would keep a fixed parity and
+        # never actually rotate any shard's assignment
+        self._rr = [0] * n
+        # least_loaded spreads by ASSIGNED batches, not served requests:
+        # served_ops only advances at dispatch, so a submit-time picker
+        # (the scheduler pins replicas at submit) would otherwise send a
+        # whole epoch's burst to one replica before any counter moved
+        self._assigned = [[0] * self.replication.replicas for _ in range(n)]
 
     @property
     def n_shards(self) -> int:
@@ -100,6 +145,33 @@ class ShardedHoneycombStore:
         boundary key itself belongs to the shard, so per-shard floor-start
         returns exactly the keys in [boundary, hi])."""
         return lo if s == s_lo else self.boundaries[s - 1]
+
+    def replica_for_dispatch(self, shard: int) -> int:
+        """Read-spreading policy: pick the replica the next read batch for
+        ``shard`` is pinned to.  ``primary_only`` always serves the primary;
+        ``round_robin`` rotates over the replica set; ``least_loaded`` picks
+        the replica that has served the fewest requests.  The pick is a
+        ROUTING decision only — the group still enforces the freshness rule
+        at dispatch (a lagging follower is skipped, never served stale).
+        Both spreading policies pick over the currently ELIGIBLE replicas,
+        so a paused/lagging follower is routed around instead of eating a
+        redirect (and, for least_loaded, soaking up assignments it never
+        serves) on every turn."""
+        group = self.shards[shard]
+        if (self.replication.policy == "primary_only"
+                or group.n_replicas == 1):
+            return 0
+        elig = group.eligible_replicas()       # always contains the primary
+        if self.replication.policy == "round_robin":
+            r = elig[self._rr[shard] % len(elig)]
+            self._rr[shard] += 1
+            return r
+        # least_loaded: fewest batches assigned so far (assignment counts
+        # move at pick time, so a burst of submit-time picks still spreads)
+        assigned = self._assigned[shard]
+        r = min(elig, key=assigned.__getitem__)
+        assigned[r] += 1
+        return r
 
     # ------------------------------------------------------------- writes
     def put(self, key: bytes, value: bytes, thread: int = 0):
@@ -177,9 +249,17 @@ class ShardedHoneycombStore:
         return [sh.flip() for sh in self.shards]
 
     # ------------------------------------------------- accelerated reads
-    def get_batch(self, keys: Sequence[bytes]) -> list[bytes | None]:
+    def _pick(self, s: int, replica: int | None) -> int:
+        """Replica for one per-shard sub-dispatch: the caller's pin (the
+        scheduler's replica-homogeneous batches) or a fresh policy pick."""
+        return replica if replica is not None else self.replica_for_dispatch(s)
+
+    def get_batch(self, keys: Sequence[bytes],
+                  replica: int | None = None) -> list[bytes | None]:
         """Batched GET: split by owning shard, one dense device batch per
-        shard, responses scattered back to arrival order."""
+        shard — each pinned to a replica by the read-spreading policy (or
+        the caller's explicit pin) — responses scattered back to arrival
+        order."""
         keys = list(keys)
         out: list[bytes | None] = [None] * len(keys)
         by_shard: dict[int, list[int]] = {}
@@ -187,16 +267,19 @@ class ShardedHoneycombStore:
             by_shard.setdefault(self.shard_for_key(k), []).append(i)
         for s, idxs in sorted(by_shard.items()):
             self.shard_ops[s] += len(idxs)
-            for i, v in zip(idxs,
-                            self.shards[s].get_batch([keys[i] for i in idxs])):
+            res = self.shards[s].get_batch([keys[i] for i in idxs],
+                                           replica=self._pick(s, replica))
+            for i, v in zip(idxs, res):
                 out[i] = v
         return out
 
-    def scan_batch(self, ranges: Sequence[tuple[bytes, bytes]]
+    def scan_batch(self, ranges: Sequence[tuple[bytes, bytes]],
+                   replica: int | None = None
                    ) -> list[list[tuple[bytes, bytes]]]:
         """Batched SCAN: decompose each range into per-shard sub-ranges,
-        dispatch one dense batch per shard, stitch per request in key order
-        (shard order IS key order), then back-fill missing global floors."""
+        dispatch one dense batch per shard (replica-pinned like get_batch),
+        stitch per request in key order (shard order IS key order), then
+        back-fill missing global floors."""
         ranges = list(ranges)
         if not ranges:
             return []
@@ -211,7 +294,8 @@ class ShardedHoneycombStore:
             i: [] for i in range(len(ranges))}
         for s, subs in sorted(per_shard.items()):
             self.shard_ops[s] += len(subs)
-            res = self.shards[s].scan_batch([(a, b) for _, a, b in subs])
+            res = self.shards[s].scan_batch([(a, b) for _, a, b in subs],
+                                            replica=self._pick(s, replica))
             for (i, _, _), sub_items in zip(subs, res):
                 parts[i].append(sub_items)   # shards visited in key order
         out = [[kv for chunk in parts[i] for kv in chunk]
@@ -228,7 +312,9 @@ class ShardedHoneycombStore:
             pending = []
             for s, reqs in sorted(probe.items()):
                 self.shard_ops[s] += len(reqs)
-                res = self.shards[s].scan_batch([(lo, lo) for _, lo in reqs])
+                res = self.shards[s].scan_batch(
+                    [(lo, lo) for _, lo in reqs],
+                    replica=self._pick(s, replica))
                 for (i, lo), floor in zip(reqs, res):
                     if floor:
                         out[i] = floor + out[i]
@@ -241,10 +327,8 @@ class ShardedHoneycombStore:
     def sync_stats(self) -> SyncStats:
         """Aggregate SyncStats across shards (counters sum; delta_fraction
         reports the worst shard)."""
-        agg = SyncStats()
-        for sh in self.shards:
-            agg.merge(sh.sync_stats)
-        return agg
+        return aggregate_stats((sh.sync_stats for sh in self.shards),
+                               SyncStats)
 
     @property
     def per_shard_sync_stats(self) -> list[SyncStats]:
@@ -254,10 +338,8 @@ class ShardedHoneycombStore:
     def pipeline_stats(self) -> PipelineStats:
         """Aggregate per-stage pipeline meters across shards (staging wall
         time, staged exports, flips)."""
-        agg = PipelineStats()
-        for sh in self.shards:
-            agg.merge(sh.pipeline_stats)
-        return agg
+        return aggregate_stats((sh.pipeline_stats for sh in self.shards),
+                               PipelineStats)
 
     @property
     def per_shard_epochs(self) -> list[int]:
@@ -268,16 +350,56 @@ class ShardedHoneycombStore:
     @property
     def stats(self) -> TreeStats:
         """Aggregate tree stats across shards."""
-        agg = TreeStats()
-        for sh in self.shards:
-            for f in dataclasses.fields(TreeStats):
-                setattr(agg, f.name,
-                        getattr(agg, f.name) + getattr(sh.stats, f.name))
-        return agg
+        return aggregate_stats((sh.stats for sh in self.shards), TreeStats)
 
     @property
     def per_shard_stats(self) -> list[TreeStats]:
         return [sh.stats for sh in self.shards]
+
+    # ------------------------------------------------ replication meters
+    @property
+    def replication_stats(self) -> SyncStats:
+        """Aggregate follower SyncStats across every shard's replica group
+        — the delta-feed amplification on top of the primary sync traffic."""
+        return aggregate_stats((sh.replication_stats for sh in self.shards),
+                               SyncStats)
+
+    @property
+    def replication_bytes(self) -> int:
+        """Total bytes the follower delta feed moved (replica-amplification
+        traffic; 0 when replicas=1)."""
+        return sum(sh.replication_bytes for sh in self.shards)
+
+    @property
+    def replica_lag_epochs(self) -> list[list[int]]:
+        """Per shard, each follower's epoch lag behind its primary."""
+        return [sh.replica_lag_epochs for sh in self.shards]
+
+    @property
+    def replica_staleness(self) -> list[list[int]]:
+        """Per shard, each follower's read-version staleness."""
+        return [sh.replica_staleness for sh in self.shards]
+
+    @property
+    def per_shard_replica_ops(self) -> list[list[int]]:
+        """Requests served per replica (primary first), per shard — the
+        read-spread twin of ``shard_ops``."""
+        return [list(sh.replica_ops) for sh in self.shards]
+
+    @property
+    def lagging_skips(self) -> int:
+        """Read batches redirected off a stale follower (freshness rule)."""
+        return sum(sh.lagging_skips for sh in self.shards)
+
+    @property
+    def replica_load_imbalance(self) -> float:
+        """max/mean requests served per replica lane across the whole store
+        (1.0 = perfectly spread; 0.0 = no device traffic yet)."""
+        ops = [o for sh in self.shards for o in sh.replica_ops]
+        total = sum(ops)
+        if not total:
+            return 0.0
+        return max(ops) / (total / len(ops))
 
     @property
     def load_imbalance(self) -> float:

@@ -4,11 +4,14 @@ composition (paper Sections 4.1 and 3-4, lifted to the sharded stack).
 The FPGA avoids head-of-line blocking by letting requests complete out of
 order.  In SPMD execution the whole batch advances in lock step, so the
 equivalent straggler mitigation is *batch composition*: read requests are
-bucketed by ``(shard, kind, cost_class)`` — owning range-shard first, then
-expected work (scan width) — so a vectorized step is neither held hostage by
-one expensive lane nor scattered across device snapshots, and responses are
-re-ordered back to arrival order on completion: out-of-order execution with
-in-order delivery, exactly the accelerator's contract.
+bucketed by ``(shard, replica, kind, cost_class)`` — owning range-shard
+first, then the replica the router's read-spreading policy assigned
+(core/replica.py; replica 0 — the primary — when the store is not
+replicated), then expected work (scan width) — so a vectorized step is
+neither held hostage by one expensive lane nor scattered across device
+snapshots, and responses are re-ordered back to arrival order on
+completion: out-of-order execution with in-order delivery, exactly the
+accelerator's contract.
 
 Writes are first-class requests too.  One ``run()`` performs the serving
 stack's full cycle as three EXPLICIT pipeline stages (the design doc lives
@@ -41,7 +44,14 @@ in core/pipeline.py):
 Bucketing by shard requires a routing function: pass
 ``shard_of=router.shard_for_key`` when driving a ``ShardedHoneycombStore``;
 the default routes everything to shard 0, which reproduces the unsharded
-behaviour exactly.
+behaviour exactly.  Read spreading over replicas likewise: pass
+``replica_of=router.replica_for_dispatch`` and each read is pinned to a
+replica AT SUBMIT (so batches stay replica-homogeneous); dispatch forwards
+the pin to the store, whose replica group still enforces the freshness
+rule (a lagging follower is skipped, never served stale).  In
+``pipeline="pipelined"`` mode ``stage_export`` stages all replicas of a
+dirty shard concurrently — the group's ``begin_export`` hook enqueues one
+standby scatter per replica lane before any flip.
 """
 from __future__ import annotations
 
@@ -67,16 +77,18 @@ class Request:
     hi: bytes = b""
     value: bytes = b""
     expected_items: int = 1
+    replica: int = 0           # replica the read is pinned to (0 = primary)
 
 
 class OutOfOrderScheduler:
-    """Buckets read requests by (shard, kind, cost class), queues writes in
-    order, runs the admit/export/dispatch pipeline stages, reassembles
-    responses in arrival order."""
+    """Buckets read requests by (shard, replica, kind, cost class), queues
+    writes in order, runs the admit/export/dispatch pipeline stages,
+    reassembles responses in arrival order."""
 
     def __init__(self, batch_size: int = 256,
                  cost_classes: Sequence[int] = (1, 4, 16, 64),
                  shard_of: Callable[[bytes], int] | None = None,
+                 replica_of: Callable[[int], int] | None = None,
                  pipeline: str = "serial"):
         assert pipeline in PIPELINE_MODES, (
             f"unknown pipeline mode {pipeline!r} (one of {PIPELINE_MODES})")
@@ -87,7 +99,11 @@ class OutOfOrderScheduler:
         # routing function key -> owning shard; SCANs bucket by their lo key
         # (the store facade still decomposes any cross-shard tail)
         self._shard_of = shard_of or (lambda key: 0)
-        self._buckets: dict[tuple[int, str, int], list[Request]] = \
+        # read-spreading assignment shard -> replica (the router's policy);
+        # None pins everything to the primary and never forwards a pin, so
+        # stores without a replica parameter keep working unchanged
+        self._replica_of = replica_of
+        self._buckets: dict[tuple[int, int, str, int], list[Request]] = \
             defaultdict(list)
         self._writes: list[Request] = []
         self._next_rid = 0
@@ -110,17 +126,20 @@ class OutOfOrderScheduler:
         if kind in WRITE_KINDS:
             self._writes.append(r)      # writes keep submission order
         else:
-            self._buckets[(self._shard_of(key), kind,
+            shard = self._shard_of(key)
+            if self._replica_of is not None:
+                r.replica = self._replica_of(shard)
+            self._buckets[(shard, r.replica, kind,
                            self._cost_class(r))].append(r)
         return rid
 
     def ready_batches(self, flush: bool = False
                       ) -> Iterable[tuple[str, list[Request]]]:
         """Full read batches (or all remaining when flushing), densest
-        first.  Every batch is shard- and cost-homogeneous.  This is THE
-        dispatch order — run() consumes it."""
-        for (_, kind, _), reqs in sorted(self._buckets.items(),
-                                         key=lambda kv: -len(kv[1])):
+        first.  Every batch is shard-, replica- and cost-homogeneous.  This
+        is THE dispatch order — run() consumes it."""
+        for (_, _, kind, _), reqs in sorted(self._buckets.items(),
+                                            key=lambda kv: -len(kv[1])):
             while len(reqs) >= self.batch_size or (flush and reqs):
                 batch = reqs[: self.batch_size]
                 del reqs[: self.batch_size]
@@ -158,8 +177,10 @@ class OutOfOrderScheduler:
         (the modeled sync barrier: reads may not be issued until the DMA is
         done); the wait is metered as ``sync_stall_s``.  Pipelined mode
         stages every dirty shard's standby buffer — the scatters are only
-        ENQUEUED — and flips each shard independently; read batches dispatch
-        while the scatters drain, so the only stall is host staging time."""
+        ENQUEUED, and a replicated shard's group hook enqueues one scatter
+        per replica lane CONCURRENTLY before any flip — then flips each
+        shard independently; read batches dispatch while the scatters
+        drain, so the only stall is host staging time."""
         before = store.sync_stats.snapshots
         t0 = _now()
         if self.pipeline == "serial":
@@ -188,10 +209,14 @@ class OutOfOrderScheduler:
         for kind, batch in self.ready_batches(flush=flush):
             self.dispatched_batches += 1
             self.dispatched_requests += len(batch)
+            # batches are replica-homogeneous; forward the pin only when a
+            # read-spreading policy is wired (plain stores take no replica)
+            kw = ({"replica": batch[0].replica}
+                  if self._replica_of is not None else {})
             if kind == "get":
-                res = store.get_batch([r.key for r in batch])
+                res = store.get_batch([r.key for r in batch], **kw)
             else:
-                res = store.scan_batch([(r.key, r.hi) for r in batch])
+                res = store.scan_batch([(r.key, r.hi) for r in batch], **kw)
             for r, v in zip(batch, res):
                 out[r.rid] = v
         ps = store.pipeline_stats

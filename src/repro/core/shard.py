@@ -43,7 +43,7 @@ import contextlib
 import dataclasses
 import functools
 import time
-from typing import Sequence
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -106,6 +106,27 @@ class SyncStats:
                         getattr(self, f.name) + getattr(other, f.name))
 
 
+@dataclasses.dataclass
+class StagedSync:
+    """One ``begin_export`` staging as it crossed the "bus" — the artifact a
+    follower replica replays (core/replica.py).
+
+    ``kind`` is "full" or "delta"; ``delta`` carries the dirty-row +
+    page-table scatter for delta stagings (None for full publishes);
+    ``snapshot`` is the staged standby itself, which doubles as the catch-up
+    source for followers that fell out of sync; ``nbytes`` is the traffic
+    this staging metered and ``delta_rows`` the unpadded dirty-row count, so
+    per-replica feeding costs O(replicas x dirty_rows) can be accounted
+    exactly; ``read_version`` is what the standby answers at once flipped.
+    """
+    kind: str
+    snapshot: TreeSnapshot
+    delta: SnapshotDelta | None
+    nbytes: int
+    delta_rows: int
+    read_version: int
+
+
 class StoreShard:
     """One range-shard of the store: its own tree, resident device snapshot,
     incremental delta sync and SyncStats."""
@@ -140,6 +161,16 @@ class StoreShard:
         self._standby: TreeSnapshot | None = None
         self._standby_rv: int | None = None
         self._standby_pin: tuple[int, int] | None = None
+        # replication hooks (core/replica.py): a ReplicaGroup wires these so
+        # EVERY staging/flip — facade-driven, scheduler-driven, or a policy
+        # auto-sync — feeds the follower replicas the same payload.  Unset
+        # (the unreplicated store) they cost one None check per sync.
+        # last_staged describes the CURRENTLY staged (unflipped) standby
+        # only; flip() clears it.
+        self.last_staged: StagedSync | None = None
+        self.on_staged: Callable[[StagedSync], None] | None = None
+        self.on_flip: Callable[[], None] | None = None
+        self._staged_delta: SnapshotDelta | None = None
 
     # ------------------------------------------------------------- writes
     def put(self, key: bytes, value: bytes, thread: int = 0):
@@ -219,6 +250,7 @@ class StoreShard:
                      and self._heap_gen == h.generation
                      and self._pt_gen == t.pt.generation
                      and frac <= self.cfg.delta_full_threshold)
+        bytes0 = stats.bytes_synced
         if can_delta:
             snap = self._publish_delta(base,
                                        np.fromiter(sorted(dirty), np.int32,
@@ -226,10 +258,12 @@ class StoreShard:
             stats.delta_syncs += 1
             stats.delta_rows += len(dirty)
             stats.delta_fraction = frac
+            staged_kind, staged_rows = "delta", len(dirty)
         else:
             snap = self._publish_full()
             stats.full_syncs += 1
             stats.delta_fraction = 1.0
+            staged_kind, staged_rows = "full", 0
         dirty.clear()
         self._heap_gen = h.generation
         self._pt_gen = t.pt.generation
@@ -252,6 +286,17 @@ class StoreShard:
             self._standby_pin = t.epochs.accel_begin_batch(1)
         self.pipeline_stats.staged_exports += 1
         self.pipeline_stats.export_s += _now() - t0
+        # replication feed: record what crossed the bus and let the replica
+        # group replay it into every follower's standby (after the export
+        # meters close, so follower staging never pollutes primary timings)
+        self.last_staged = StagedSync(
+            kind=staged_kind, snapshot=snap,
+            delta=self._staged_delta if staged_kind == "delta" else None,
+            nbytes=stats.bytes_synced - bytes0, delta_rows=staged_rows,
+            read_version=self._standby_rv)
+        self._staged_delta = None
+        if self.on_staged is not None:
+            self.on_staged(self.last_staged)
         return True
 
     def flip(self) -> TreeSnapshot | None:
@@ -272,6 +317,12 @@ class StoreShard:
         self._standby_pin = None
         if old_pin is not None:
             self.tree.epochs.accel_complete_batch(*old_pin)
+        if self.on_flip is not None:      # replica group: flip the followers
+            self.on_flip()
+        # the payload only describes the (now published) standby; followers
+        # consumed it at staging time — drop it so the delta's device
+        # arrays don't outlive the sync on a quiescent store
+        self.last_staged = None
         return self._snapshot
 
     def export_snapshot(self, force: bool = False,
@@ -350,6 +401,7 @@ class StoreShard:
             root_lid=jnp.int32(t.root_lid),
             read_version=jnp.int32(t.versions.read_version()),
             **fields)
+        self._staged_delta = delta   # replayable by follower replicas
         return _jit_apply_delta(base, delta, backend=_DELTA_BACKEND)
 
     @staticmethod
@@ -384,7 +436,13 @@ class StoreShard:
         keys = list(keys)
         if not keys:
             return []
-        snap = self._snapshot_for_read()
+        return self._device_get(self._snapshot_for_read(), keys)
+
+    def _device_get(self, snap: TreeSnapshot,
+                    keys: list[bytes]) -> list[bytes | None]:
+        """Execute one dense GET batch against ``snap`` — the active
+        snapshot, or a follower replica's device image (core/replica.py
+        serves followers through the primary's dispatch machinery)."""
         # pad ragged batches (router sub-batches) to power-of-two buckets so
         # each (cfg, shapes) compiles once per bucket, not per length
         padded = keys + [keys[0]] * (bucket_pow2(len(keys)) - len(keys))
@@ -419,6 +477,15 @@ class StoreShard:
         if not ranges:
             return []
         snap = self._snapshot_for_read()
+        return self._device_scan(snap, ranges, self._fallback_read_version())
+
+    def _device_scan(self, snap: TreeSnapshot,
+                     ranges: list[tuple[bytes, bytes]],
+                     fallback_rv: int | None
+                     ) -> list[list[tuple[bytes, bytes]]]:
+        """Execute one dense SCAN batch against ``snap`` (active snapshot or
+        a follower replica's image); truncated requests fall back to the
+        host tree at ``fallback_rv``."""
         pad = [ranges[0]] * (bucket_pow2(len(ranges)) - len(ranges))
         padded = ranges + pad
         self.pipeline_stats.dispatched_lanes += len(ranges)
@@ -438,11 +505,10 @@ class StoreShard:
             trunc = np.asarray(res.truncated)
         finally:
             self.tree.epochs.accel_complete_batch(slo, shi)
-        rv = self._fallback_read_version()
         out = []
         for b, (lo, hi) in enumerate(ranges):
             if trunc[b]:
-                out.append(self.tree.scan(lo, hi, read_version=rv))
+                out.append(self.tree.scan(lo, hi, read_version=fallback_rv))
                 continue
             items = []
             for j in range(int(count[b])):

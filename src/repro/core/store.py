@@ -17,7 +17,9 @@ The store stack is layered for scale-out:
     the keyspace range-partitioned across N shards behind the SAME facade,
     with a router that splits batches by owning shard, decomposes
     cross-shard SCANs and stitches results in key order, and syncs each
-    dirty shard independently.
+    dirty shard independently.  Each shard slot is a ``ReplicaGroup``
+    (core/replica.py): a primary plus optional follower replicas fed by
+    the primary's delta stream, with policy-driven read spreading.
 
 ``ShardedHoneycombStore(shards=1)`` is operation-for-operation equivalent
 to ``HoneycombStore`` (same results, same sync byte counts), which is the

@@ -25,7 +25,10 @@ Two halves keep the abstract model honest:
     through the identical shape (range partition, per-shard delta sync
     plus one pipelined scheduler epoch with independent per-shard flips,
     cross-shard scan stitching) and reports per-shard sync traffic and
-    router load imbalance — the measured twin of the modeled numbers.
+    router load imbalance — the measured twin of the modeled numbers;
+    ``live_replicated_smoke()`` adds the replication axis (follower
+    replicas fed by primary deltas, round-robin read spreading, lag and
+    amplification meters — core/replica.py).
 
 Usage: PYTHONPATH=src python -m repro.launch.store_dryrun
 """
@@ -40,7 +43,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core import (HoneycombConfig, OutOfOrderScheduler,
-                        ShardedHoneycombStore, uniform_int_boundaries)
+                        ReplicationConfig, ShardedHoneycombStore,
+                        uniform_int_boundaries)
 from repro.core.keys import int_key
 from repro.core.read_path import (NODE_FIELDS, SnapshotDelta, TreeSnapshot,
                                   apply_snapshot_delta, batched_get,
@@ -221,6 +225,45 @@ def live_sharded_smoke(shards: int = 4, n_items: int = 1024,
     }
 
 
+def live_replicated_smoke(shards: int = 2, replicas: int = 2,
+                          n_items: int = 512, batch: int = 64) -> dict:
+    """The replication twin of ``live_sharded_smoke``: each shard serves
+    from a primary plus follower replicas fed by the primary's delta
+    stream (core/replica.py), with round-robin read spreading through the
+    scheduler's (shard, replica, kind, cost) buckets.  Reports per-replica
+    served lanes, the delta-feed amplification bytes and the epoch-lag
+    freshness meters the mesh-scale model treats as free."""
+    st = ShardedHoneycombStore(
+        HoneycombConfig(), heap_capacity=1024, shards=shards,
+        boundaries=uniform_int_boundaries(n_items, shards),
+        replication=ReplicationConfig(replicas=replicas,
+                                      policy="round_robin"))
+    rng = np.random.default_rng(13)
+    for i in rng.permutation(n_items):
+        st.put(int_key(int(i)), b"v" * 12)
+    st.export_snapshot()                 # primaries + followers resident
+    sched = OutOfOrderScheduler(batch_size=batch // 2,
+                                shard_of=st.shard_for_key,
+                                replica_of=st.replica_for_dispatch,
+                                pipeline="pipelined")
+    for k in range(batch):
+        sched.submit("update", int_key(int(rng.integers(0, n_items))),
+                     value=b"r" * 12)
+        sched.submit("get", int_key(int(rng.integers(0, n_items))))
+        sched.submit("get", int_key(int(rng.integers(0, n_items))))
+    sched.run(st)
+    return {
+        "shards": shards, "replicas": replicas, "items": n_items,
+        "per_shard_replica_ops": st.per_shard_replica_ops,
+        "replica_load_imbalance": st.replica_load_imbalance,
+        "replication_bytes": st.replication_bytes,
+        "primary_sync_bytes": st.sync_stats.bytes_synced,
+        "replica_lag_epochs": st.replica_lag_epochs,
+        "replica_staleness": st.replica_staleness,
+        "lagging_skips": st.lagging_skips,
+    }
+
+
 def main(batch_per_shard: int = 512, n_items: int = 128_000_000):
     cfg = HoneycombConfig()   # paper geometry: 64-cap nodes, 8 shortcuts
     mesh = make_production_mesh(multi_pod=False)
@@ -280,6 +323,7 @@ def main(batch_per_shard: int = 512, n_items: int = 128_000_000):
         "delta_sync": delta_sync_analysis(cfg, snap_abs),
         "pipeline": pipeline_occupancy_model(cfg, snap_abs, batch_per_shard),
         "live_sharded_store": live_sharded_smoke(),
+        "live_replicated_store": live_replicated_smoke(),
     }
     print(json.dumps(out, indent=1))
     p = Path("experiments/store_dryrun.json")

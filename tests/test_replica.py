@@ -1,0 +1,400 @@
+"""Replication subsystem (core/replica.py): the replicas=1/primary_only
+op-for-op equivalence invariant (results AND sync byte counts), randomized
+read-spreading correctness under concurrent writes (freshness rule: a
+lagging follower is never served), O(replicas x dirty_rows) delta feeding,
+epoch/read-version lag meters, policy auto-sync feeding, pause/resume
+catch-up, and scheduler replica bucketing."""
+import numpy as np
+import pytest
+
+from repro.core import (HoneycombConfig, HoneycombStore, OutOfOrderScheduler,
+                        ReplicationConfig, ShardedHoneycombStore,
+                        uniform_int_boundaries)
+from repro.core.keys import int_key
+
+SMALL = HoneycombConfig(node_cap=16, log_cap=4, n_shortcuts=4)
+EXPL = HoneycombConfig(node_cap=16, log_cap=4, n_shortcuts=4,
+                       sync_policy="explicit")
+B2 = uniform_int_boundaries(200, 2)
+
+
+def replicated(cfg=SMALL, shards=1, replicas=2, policy="round_robin"):
+    return ShardedHoneycombStore(
+        cfg, heap_capacity=256, shards=shards,
+        boundaries=B2 if shards == 2 else None,
+        replication=ReplicationConfig(replicas=replicas, policy=policy))
+
+
+def apply_random_ops(stores, oracle, rng, n, key_space=200):
+    for _ in range(n):
+        k = int_key(int(rng.integers(0, key_space)))
+        op = rng.random()
+        if op < 0.55:
+            v = bytes(rng.integers(65, 91, 8))
+            for s in stores:
+                s.put(k, v)
+            oracle[k] = v
+        elif op < 0.8:
+            v = bytes(rng.integers(97, 123, 8))
+            for s in stores:
+                s.update(k, v)
+            oracle[k] = v
+        else:
+            for s in stores:
+                s.delete(k)
+            oracle.pop(k, None)
+
+
+# ---------------------------------------------------------------- (a) the
+# equivalence invariant, mirroring PR 2's shards=1 and PR 3's serial mode
+def test_replicas1_primary_only_identical_to_unreplicated():
+    """replicas=1 + primary_only is operation-for-operation the
+    unreplicated store: same results, same sync byte counts, no follower
+    traffic, no replica machinery on any path."""
+    un = HoneycombStore(SMALL, heap_capacity=256)
+    rp = replicated(replicas=1, policy="primary_only")
+    oracle = {}
+    rng = np.random.default_rng(9)
+    for round_ in range(4):
+        apply_random_ops((un, rp), oracle, rng, 60)
+        keys = [int_key(i) for i in range(0, 200, 7)]
+        assert un.get_batch(keys) == rp.get_batch(keys) \
+            == [oracle.get(k) for k in keys]
+        ranges = [(int_key(a), int_key(a + 9)) for a in range(0, 180, 31)]
+        assert un.scan_batch(ranges) == rp.scan_batch(ranges)
+        un.export_snapshot()
+        rp.export_snapshot()
+        assert un.sync_stats == rp.sync_stats, round_
+    assert un.sync_stats.delta_syncs > 0       # the delta path was exercised
+    assert rp.replication_bytes == 0           # zero follower amplification
+    assert rp.lagging_skips == 0
+    assert rp.shards[0].n_replicas == 1
+
+
+# ------------------------------------------------------- (b) read spreading
+def test_randomized_spreading_matches_primary_only_under_writes():
+    """Randomized round-robin read spreading returns results identical to
+    primary-only under concurrent writes — including with an injected
+    lagging follower, which is skipped (freshness rule), never served
+    stale."""
+    ref = ShardedHoneycombStore(
+        EXPL, heap_capacity=256, shards=2, boundaries=B2,
+        replication=ReplicationConfig(1, "primary_only"))
+    spr = ShardedHoneycombStore(
+        EXPL, heap_capacity=256, shards=2, boundaries=B2,
+        replication=ReplicationConfig(3, "round_robin"))
+    oracle = {}
+    rng = np.random.default_rng(17)
+    paused = spr.shards[0]
+    for round_ in range(5):
+        apply_random_ops((ref, spr), oracle, rng, 40)
+        if round_ == 2:                 # inject replication lag on shard 0
+            paused.pause_follower(1)
+        ref.export_snapshot()
+        spr.export_snapshot()
+        # writes AFTER the sync: device reads stay at the admitted version
+        apply_random_ops((ref, spr), oracle, rng, 12)
+        keys = [int_key(int(k)) for k in rng.integers(0, 200, 24)]
+        assert spr.get_batch(keys) == ref.get_batch(keys)
+        ranges = [(int_key(a), int_key(a + 15)) for a in
+                  (3, 47, 92, 120, 160)]          # 47/92 cross the boundary
+        assert spr.scan_batch(ranges) == ref.scan_batch(ranges)
+    # the spread actually happened: follower replicas served requests...
+    follower_ops = [f.served_ops for g in spr.shards for f in g.followers]
+    assert sum(follower_ops) > 0
+    # ...but the paused follower froze the moment it started lagging: the
+    # policy routes around it at pick time (no per-turn redirects), and an
+    # explicit pin is redirected by the dispatch-time freshness backstop
+    assert paused.replica_lag_epochs[0] > 0
+    assert 1 not in paused.eligible_replicas()
+    frozen = paused.followers[0].served_ops
+    keys = [int_key(i) for i in range(0, 100, 5)]
+    for _ in range(4):
+        assert spr.get_batch(keys) == ref.get_batch(keys)
+    assert paused.followers[0].served_ops == frozen
+    skips0 = paused.lagging_skips
+    assert paused.get_batch([int_key(3)], replica=1) \
+        == ref.shards[0].get_batch([int_key(3)])
+    assert paused.lagging_skips == skips0 + 1
+    # resume + resync: the follower catches up (full copy) and serves again
+    paused.resume_follower(1)
+    paused.resync_follower(1)
+    assert paused.replica_lag_epochs[0] == 0
+    assert paused.replica_staleness[0] == 0
+    before = paused.followers[0].served_ops
+    for _ in range(6):
+        assert spr.get_batch(keys) == ref.get_batch(keys)
+    assert paused.followers[0].served_ops > before
+
+
+def test_least_loaded_policy_balances_replica_lanes():
+    st = replicated(replicas=3, policy="least_loaded")
+    for i in range(200):
+        st.put(int_key(i), b"v%d" % i)
+    st.export_snapshot()
+    keys = [int_key(i) for i in range(0, 200, 10)]
+    for _ in range(9):
+        assert st.get_batch(keys) == [b"v%d" % i for i in range(0, 200, 10)]
+    ops = st.shards[0].replica_ops
+    assert all(o > 0 for o in ops)
+    assert max(ops) - min(ops) <= len(keys)    # within one batch of even
+    assert st.replica_load_imbalance == pytest.approx(1.0, abs=0.35)
+
+
+# --------------------------------------------------------- (c) feed costs
+def test_delta_feed_costs_o_replicas_times_dirty_rows():
+    """Feeding N followers costs O(N x dirty_rows) bytes — each follower
+    re-applies exactly the primary's delta (same bytes, same rows) — not
+    O(N x store_size), measured via per-replica SyncStats."""
+    st = replicated(replicas=3)
+    for i in range(200):
+        st.put(int_key(i), b"v" * 8)
+    st.export_snapshot()                  # full publish + full follower copy
+    g = st.shards[0]
+    assert [f.sync_stats.full_syncs for f in g.followers] == [1, 1]
+    full_bytes = g.followers[0].sync_stats.bytes_synced
+    assert full_bytes > 0
+    p0 = g.primary.sync_stats.bytes_synced
+    pr0 = g.primary.sync_stats.delta_rows
+    f0 = [f.sync_stats.bytes_synced for f in g.followers]
+    for i in range(100, 108):             # small dirty set
+        st.update(int_key(i), b"u" * 8)
+    st.export_snapshot()
+    p_delta = g.primary.sync_stats.bytes_synced - p0
+    p_rows = g.primary.sync_stats.delta_rows - pr0
+    assert 0 < p_rows < 20
+    for f, b0 in zip(g.followers, f0):
+        fd = f.sync_stats.bytes_synced - b0
+        assert fd == p_delta              # byte-identical delta per replica
+        assert f.sync_stats.delta_rows == p_rows
+        assert f.sync_stats.delta_syncs == 1
+        assert fd < 0.25 * full_bytes     # O(dirty), not O(store)
+    assert st.replication_bytes == sum(f.sync_stats.bytes_synced
+                                       for f in g.followers)
+    # amplification is exactly (replicas - 1) x the primary's delta
+    assert st.replication_bytes - sum(f0) == 2 * p_delta
+
+
+def test_follower_reads_serve_from_follower_snapshot():
+    """A batch pinned to a follower executes against the FOLLOWER's device
+    image (its own buffers), not the primary's — proven by divergence when
+    the follower is frozen under the explicit sync policy."""
+    st = replicated(cfg=EXPL, replicas=2)
+    for i in range(50):
+        st.put(int_key(i), b"old%d" % i)
+    st.export_snapshot()
+    g = st.shards[0]
+    keys = [int_key(i) for i in range(0, 50, 5)]
+    # follower pinned explicitly serves the same data
+    assert g.get_batch(keys, replica=1) == [b"old%d" % i
+                                            for i in range(0, 50, 5)]
+    assert g.followers[0].served_ops == len(keys)
+    # freeze the follower, move the primary ahead one epoch
+    g.pause_follower(1)
+    for i in range(50):
+        st.update(int_key(i), b"new%d" % i)
+    st.export_snapshot()
+    # a batch pinned to the lagging follower is NOT served stale: the
+    # freshness rule redirects it to the primary's (new) snapshot
+    assert g.get_batch(keys, replica=1) == [b"new%d" % i
+                                            for i in range(0, 50, 5)]
+    assert g.lagging_skips == 1
+    assert g.followers[0].served_ops == len(keys)   # unchanged
+
+
+# ------------------------------------------------------------- lag meters
+def test_epoch_and_staleness_lag_meters():
+    st = replicated(cfg=EXPL, replicas=2)
+    g = st.shards[0]
+    for i in range(40):
+        st.put(int_key(i), b"a")
+    st.export_snapshot()
+    assert g.replica_lag_epochs == [0]
+    assert g.replica_staleness == [0]
+    g.pause_follower(1)
+    for round_ in range(2):               # two epochs while paused
+        for i in range(40):
+            st.update(int_key(i), b"b%d" % round_)
+        st.export_snapshot()
+    assert g.replica_lag_epochs == [2]
+    assert g.replica_staleness[0] > 0
+    # resync: immediate full catch-up, metered as a follower full sync
+    full0 = g.followers[0].sync_stats.full_syncs
+    g.resume_follower(1)
+    g.resync_follower(1)
+    assert g.replica_lag_epochs == [0]
+    assert g.replica_staleness == [0]
+    assert g.followers[0].sync_stats.full_syncs == full0 + 1
+
+
+def test_resumed_follower_catches_up_full_on_next_sync():
+    """A follower that missed a delta cannot replay later deltas onto its
+    stale base: the next feed after resume is a FULL copy, after which
+    delta feeding resumes."""
+    st = replicated(cfg=EXPL, replicas=2)
+    g = st.shards[0]
+    for i in range(60):
+        st.put(int_key(i), b"v")
+    st.export_snapshot()
+    g.pause_follower(1)
+    for i in range(8):
+        st.update(int_key(i), b"w")
+    st.export_snapshot()                  # missed by the follower
+    g.resume_follower(1)
+    f = g.followers[0]
+    deltas0, fulls0 = f.sync_stats.delta_syncs, f.sync_stats.full_syncs
+    for i in range(8):
+        st.update(int_key(i), b"x")
+    st.export_snapshot()                  # catch-up round
+    assert f.sync_stats.full_syncs == fulls0 + 1
+    assert f.sync_stats.delta_syncs == deltas0
+    assert g.replica_lag_epochs == [0]
+    keys = [int_key(i) for i in range(8)]
+    assert g.get_batch(keys, replica=1) == [b"x"] * 8
+    for i in range(8):
+        st.update(int_key(i), b"y")
+    st.export_snapshot()                  # back on the delta feed
+    assert f.sync_stats.delta_syncs == deltas0 + 1
+
+
+def test_every_k_policy_auto_sync_feeds_followers():
+    """A sync triggered by the shard's own "every_k" policy — not through
+    the group facade — still feeds every follower (the staging/flip hooks
+    fire on every path)."""
+    cfg = HoneycombConfig(node_cap=16, log_cap=4, n_shortcuts=4,
+                          sync_policy="every_k", sync_every_k=8)
+    st = ShardedHoneycombStore(
+        cfg, heap_capacity=256, shards=1,
+        replication=ReplicationConfig(2, "round_robin"))
+    for i in range(32):
+        st.put(int_key(i), b"v%d" % i)    # 4 automatic policy syncs
+    g = st.shards[0]
+    assert g.primary.epoch >= 4
+    assert g.replica_lag_epochs == [0]
+    assert g.followers[0].sync_stats.snapshots \
+        == g.primary.sync_stats.snapshots
+    assert g.get_batch([int_key(3)], replica=1) == [b"v3"]
+
+
+# ---------------------------------------------------------------- scheduler
+def test_scheduler_buckets_by_replica_and_spreads_reads():
+    """The scheduler pins each read to a replica at submit, buckets by
+    (shard, replica, kind, cost_class), and dispatch spreads over the
+    replica set with correct, in-arrival-order responses."""
+    st = replicated(replicas=2, policy="round_robin")
+    for i in range(100):
+        st.put(int_key(i), b"v%d" % i)
+    st.export_snapshot()
+    sched = OutOfOrderScheduler(batch_size=4, shard_of=st.shard_for_key,
+                                replica_of=st.replica_for_dispatch)
+    rids = {sched.submit("get", int_key(i * 7 % 100)): i * 7 % 100
+            for i in range(16)}
+    out = sched.run(st)
+    for rid, k in rids.items():
+        assert out[rid] == b"v%d" % k
+    # 16 gets round-robined over 2 replicas -> two 8-deep buckets -> 4
+    # replica-homogeneous batches
+    assert sched.dispatched_batches == 4
+    ops = st.shards[0].replica_ops
+    assert ops == [8, 8]
+    # writes interleave correctly and the pipelined export feeds replicas
+    sched2 = OutOfOrderScheduler(batch_size=4, shard_of=st.shard_for_key,
+                                 replica_of=st.replica_for_dispatch,
+                                 pipeline="pipelined")
+    for i in range(8):
+        sched2.submit("update", int_key(i), value=b"w%d" % i)
+    for i in range(8):
+        sched2.submit("get", int_key(i))
+    out2 = sched2.run(st)
+    gets = [v for v in out2.values() if v is not None]
+    assert sorted(gets) == sorted(b"w%d" % i for i in range(8))
+    assert st.shards[0].replica_lag_epochs == [0]
+
+
+def test_round_robin_rotates_within_every_shard():
+    """Multi-shard batches rotate EVERY shard's replica assignment: the
+    cursor is per shard, so a batch spanning N shards cannot freeze each
+    shard onto one fixed replica by cursor parity."""
+    st = replicated(shards=2, replicas=2)
+    for i in range(200):
+        st.put(int_key(i), b"v%d" % i)
+    st.export_snapshot()
+    keys = [int_key(10), int_key(150)]        # spans both shards every call
+    for _ in range(8):
+        assert st.get_batch(keys) == [b"v10", b"v150"]
+    for g in st.shards:                        # both lanes of BOTH shards
+        assert g.replica_ops == [4, 4]
+
+
+def test_policies_route_around_lagging_follower():
+    """A paused/lagging follower drops out of the eligible set, so
+    least_loaded neither soaks assignments into the dead lane nor redirects
+    every turn — the healthy lanes split the load."""
+    st = replicated(cfg=EXPL, replicas=3, policy="least_loaded")
+    g = st.shards[0]
+    for i in range(100):
+        st.put(int_key(i), b"v%d" % i)
+    st.export_snapshot()
+    g.pause_follower(1)
+    for i in range(10):
+        st.update(int_key(i), b"w%d" % i)
+    st.export_snapshot()                       # follower 1 now lags
+    assert g.eligible_replicas() == [0, 2]
+    keys = [int_key(i) for i in range(0, 100, 10)]
+    for _ in range(8):
+        st.get_batch(keys)
+    assert st.lagging_skips == 0               # routed around, no redirects
+    assert g.followers[0].served_ops == 0
+    assert g.replica_ops[0] > 0 and g.replica_ops[2] > 0
+    assert abs(g.replica_ops[0] - g.replica_ops[2]) <= len(keys)
+
+
+def test_missed_staging_keeps_epoch_lag_honest():
+    """A follower that missed an intermediate staging does NOT publish its
+    older standby under the new epoch: the lag meters stay truthful and
+    the freshness rule redirects pinned reads."""
+    st = replicated(cfg=EXPL, replicas=2)
+    g = st.shards[0]
+    for i in range(40):
+        st.put(int_key(i), b"v")
+    st.export_snapshot()
+    for i in range(8):
+        st.update(int_key(i), b"a")
+    st.begin_export()                          # D1: follower stages too
+    g.pause_follower(1)
+    for i in range(8):
+        st.update(int_key(i), b"b")
+    st.begin_export()                          # D2: follower misses it
+    g.resume_follower(1)
+    st.flip()
+    # the follower's D1-content standby must not masquerade as caught up
+    assert g.replica_lag_epochs == [1]
+    assert g.replica_staleness[0] > 0
+    assert g.get_batch([int_key(0)], replica=1) == [b"b"]   # redirected
+    assert g.lagging_skips == 1
+
+
+def test_scheduler_least_loaded_spreads_within_a_burst():
+    """least_loaded picks by ASSIGNED batches, so a whole burst pinned at
+    submit time (before any dispatch updates served_ops) still spreads
+    over the replica set instead of degenerating onto one lane."""
+    st = replicated(replicas=2, policy="least_loaded")
+    for i in range(100):
+        st.put(int_key(i), b"v%d" % i)
+    st.export_snapshot()
+    sched = OutOfOrderScheduler(batch_size=4, shard_of=st.shard_for_key,
+                                replica_of=st.replica_for_dispatch)
+    rids = {sched.submit("get", int_key(i * 3 % 100)): i * 3 % 100
+            for i in range(16)}
+    out = sched.run(st)
+    for rid, k in rids.items():
+        assert out[rid] == b"v%d" % k
+    assert st.shards[0].replica_ops == [8, 8]
+
+
+def test_replication_config_validation():
+    with pytest.raises(AssertionError):
+        ReplicationConfig(replicas=0)
+    with pytest.raises(AssertionError):
+        ReplicationConfig(replicas=2, policy="chaos")
+    ReplicationConfig(replicas=4, policy="least_loaded")

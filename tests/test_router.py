@@ -6,8 +6,8 @@ import numpy as np
 import pytest
 
 from repro.core import (HoneycombConfig, HoneycombStore, OutOfOrderScheduler,
-                        ShardedHoneycombStore, ShardingConfig,
-                        uniform_int_boundaries)
+                        ReplicationConfig, ShardedHoneycombStore,
+                        ShardingConfig, bucket_pow2, uniform_int_boundaries)
 from repro.core.keys import int_key
 from repro.core.shard import WIRE_ENTRY_OVERHEAD
 
@@ -281,3 +281,39 @@ def test_router_load_imbalance_meter():
     for i in range(40):                         # skew at shard 0
         sh.get(int_key(5))
     assert sh.load_imbalance > 1.5
+
+
+def test_replica_ragged_batch_padding_and_load_metering():
+    """Satellite: ragged per-replica sub-batches still pad to the shared
+    pow2 bucket schedule (one jit compile per bucket, whichever replica's
+    image the batch executes against), and the router meters the per-lane
+    read spread (replica_load_imbalance) alongside shard imbalance."""
+    sh = ShardedHoneycombStore(
+        SMALL, heap_capacity=256, shards=1,
+        replication=ReplicationConfig(replicas=2, policy="round_robin"))
+    assert sh.replica_load_imbalance == 0.0
+    for i in range(100):
+        sh.put(int_key(i), b"v%d" % i)
+    sh.export_snapshot()
+    ps0 = sh.pipeline_stats
+    lanes0, padded0 = ps0.dispatched_lanes, ps0.padded_lanes
+    # two ragged batches, round-robined onto different replicas
+    assert sh.get_batch([int_key(i) for i in range(5)]) \
+        == [b"v%d" % i for i in range(5)]
+    assert sh.get_batch([int_key(i) for i in range(3)]) \
+        == [b"v%d" % i for i in range(3)]
+    ps = sh.pipeline_stats
+    assert ps.dispatched_lanes - lanes0 == 8
+    assert ps.padded_lanes - padded0 == bucket_pow2(5) + bucket_pow2(3)
+    # one batch per replica lane: 5 on the primary, 3 on the follower
+    assert sh.per_shard_replica_ops == [[5, 3]]
+    assert sh.replica_load_imbalance == pytest.approx(5 / 4)
+    # ragged scans pad on the same schedule and spread the same way
+    ranges = [(int_key(a), int_key(a + 4)) for a in (0, 20, 40)]
+    sh.scan_batch(ranges)
+    ps2 = sh.pipeline_stats
+    assert ps2.padded_lanes - ps.padded_lanes == bucket_pow2(3)
+    assert sum(sum(ops) for ops in sh.per_shard_replica_ops) == 11
+    # replica lanes are invisible to the SHARD imbalance meter (still one
+    # shard's traffic) but visible to the replica meter
+    assert sh.load_imbalance == pytest.approx(1.0)
