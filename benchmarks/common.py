@@ -16,8 +16,8 @@ import time
 import numpy as np
 
 from repro.baselines.cpu_store import CpuOrderedStore
-from repro.core import (HoneycombConfig, HoneycombStore,
-                        OutOfOrderScheduler, ReplicationConfig,
+from repro.core import (Get, HoneycombConfig, HoneycombService,
+                        HoneycombStore, Put, ReplicationConfig, Scan,
                         ShardedHoneycombStore, uniform_int_boundaries)
 from repro.core.keys import int_key
 
@@ -166,17 +166,16 @@ def run_scheduled(store, sampler, *, n_ops: int, read_frac: float,
                   n_items: int, scan_items: int = 0, batch: int = 64,
                   pipeline: str = "serial", val: bytes = b"x" * 16,
                   seed: int = 1) -> dict:
-    """Timed mixed workload driven through the OutOfOrderScheduler's
-    admit/export/dispatch pipeline (one run() epoch per ``batch``
-    submissions).  Returns ops/s plus the scheduler's per-stage meters —
-    the sync-stall-time comparison is THE pipelined-vs-serial artifact:
-    serial mode blocks on every epoch's sync barrier; pipelined mode
-    overlaps the standby scatters with read dispatch."""
+    """Timed mixed workload driven through the typed service front end
+    (``HoneycombService`` — core/api.py): ops submitted as first-class
+    messages, one ``drain()`` pipeline epoch per ``batch`` submissions,
+    routing self-wired from the store.  Returns ops/s plus the service's
+    per-stage meters — the sync-stall-time comparison is THE
+    pipelined-vs-serial artifact: serial mode blocks on every epoch's sync
+    barrier; pipelined mode overlaps the standby scatters with read
+    dispatch."""
     start_sync = sync_traffic(store)
-    shard_of = getattr(store, "shard_for_key", None)
-    replica_of = getattr(store, "replica_for_dispatch", None)
-    sched = OutOfOrderScheduler(batch_size=batch, shard_of=shard_of,
-                                replica_of=replica_of, pipeline=pipeline)
+    svc = HoneycombService(store, batch_size=batch, pipeline=pipeline)
     rng = np.random.default_rng(seed)
     reads = rng.random(n_ops) < read_frac
     keys = sampler(n_ops)
@@ -184,22 +183,22 @@ def run_scheduled(store, sampler, *, n_ops: int, read_frac: float,
     for i in range(n_ops):
         k = int(keys[i])
         if not reads[i]:
-            sched.submit("put", int_key(k), value=val)
+            svc.submit(Put(int_key(k), val))
         elif scan_items:
-            sched.submit("scan", int_key(k),
-                         int_key(min(k + scan_items, n_items - 1)),
-                         expected_items=scan_items + 1)
+            svc.submit(Scan(int_key(k),
+                            int_key(min(k + scan_items, n_items - 1)),
+                            expected_items=scan_items + 1))
         else:
-            sched.submit("get", int_key(k))
+            svc.submit(Get(int_key(k)))
         if (i + 1) % batch == 0:
-            sched.run(store)
-    sched.run(store)                     # flush the tail epoch
+            svc.drain()
+    svc.drain()                          # flush the tail epoch
     dt = time.perf_counter() - t0
     end = sync_traffic(store)
-    st = sched.stats
+    st = svc.stats
     return {
         "ops_per_s": n_ops / dt, "seconds": dt, "ops": n_ops,
-        "pipeline": pipeline, "epochs": st.runs, "syncs": sched.syncs,
+        "pipeline": pipeline, "epochs": st.runs, "syncs": svc.syncs,
         "sync_stall_s": st.sync_stall_s, "stall_fraction": st.stall_fraction,
         "admit_s": st.admit_s, "export_s": st.export_s,
         "dispatch_s": st.dispatch_s, "lane_occupancy": st.lane_occupancy,

@@ -15,6 +15,12 @@ read-throughput-vs-replicas and sync-bytes-amplification curves.
 ``--tiny`` shrinks every section's workload for CI smoke runs.  A summary
 table of every section's sync meters (log entries, wire bytes, sync bytes,
 replica amplification) prints after the sweep.
+
+The scheduler-driven sections run through the typed service API
+(``HoneycombService.submit``/``drain`` with first-class op messages —
+core/api.py); ``service_api_smoke`` additionally round-trips every request
+through the wire codec and asserts monotone serving-version stamps on a
+replicated sharded store.
 """
 from __future__ import annotations
 
@@ -25,9 +31,11 @@ import time
 from pathlib import Path
 
 from . import (bytes_model, cache_lb, cloud_storage, key_size, latency,
-               log_block, mvcc_cost, roofline, scan_size, ycsb)
+               log_block, mvcc_cost, roofline, scan_size, service_smoke,
+               ycsb)
 
 SECTIONS = [
+    ("service_api_smoke", service_smoke.run),
     ("fig10_ycsb", ycsb.run),
     ("fig11_cloud_storage", cloud_storage.run),
     ("fig12_latency", latency.run),

@@ -10,10 +10,12 @@ per-shard sync bytes/op and router load imbalance metered alongside the
 single-device numbers.
 
 Pipeline is a second axis (``--pipeline serial,pipelined``): the same
-workloads drive the scheduler's epoch pipeline in each mode, reporting
-pipelined-vs-serial throughput and the sync-stall-time meter (serial
-blocks on the sync barrier every epoch; pipelined overlaps the standby
-scatters with read dispatch — see core/pipeline.py).
+workloads drive the typed service front end (``HoneycombService`` with
+first-class ``Put``/``Get``/``Scan`` op messages — core/api.py, routing
+self-wired from the store) through its epoch pipeline in each mode,
+reporting pipelined-vs-serial throughput and the sync-stall-time meter
+(serial blocks on the sync barrier every epoch; pipelined overlaps the
+standby scatters with read dispatch — see core/pipeline.py).
 
 Replicas are a third axis (``--replicas 1,2,4``): the read-heavy workloads
 (B, C — uniform and the zipfian skew where read spreading wins, per F2)

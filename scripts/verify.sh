@@ -3,7 +3,10 @@
 #
 #   scripts/verify.sh          # fast gate: everything not marked slow
 #   scripts/verify.sh --all    # full suite, including slow tests
-#   scripts/verify.sh --smoke  # benchmark smoke only (tiny sizes):
+#   scripts/verify.sh --smoke  # benchmark smoke only (tiny sizes): the
+#                              # HoneycombService smoke (typed op messages,
+#                              # submit_many + drain over a replicated
+#                              # sharded store, wire-codec roundtrip),
 #                              # serial-vs-pipelined YCSB+latency plus a
 #                              # --replicas 1,2 read-spreading sweep;
 #                              # results land in experiments/bench_results.json
@@ -16,7 +19,7 @@ if [[ "${1:-}" == "--all" ]]; then
     exec python -m pytest -x -q
 fi
 if [[ "${1:-}" == "--smoke" ]]; then
-    exec python -m benchmarks.run fig10_ycsb,fig12_latency --tiny \
-        --pipeline serial,pipelined --replicas 1,2 --strict
+    exec python -m benchmarks.run service_api,fig10_ycsb,fig12_latency \
+        --tiny --pipeline serial,pipelined --replicas 1,2 --strict
 fi
 exec python -m pytest -x -q -m "not slow"

@@ -1,6 +1,10 @@
 """Honeycomb core: the paper's contribution as a composable JAX module."""
 from .config import (HoneycombConfig, DEFAULT_CONFIG, REPLICA_POLICIES,
-                     ReplicationConfig, ShardingConfig, bucket_pow2)
+                     ReplicationConfig, ServiceConfig, ShardingConfig,
+                     bucket_pow2)
+from .api import (Delete, Get, HoneycombService, Put, Response, Routing,
+                  Scan, Ticket, Update, WIRE_ENTRY_OVERHEAD, decode_wire,
+                  decode_wire_stream, wire_entry_nbytes)
 from .btree import HoneycombTree
 from .pipeline import PIPELINE_MODES, PipelineStats
 from .shard import StagedSync, StoreShard
@@ -15,12 +19,15 @@ from .scheduler import OutOfOrderScheduler, Request
 from .cache import InteriorCache
 
 __all__ = [
-    "HoneycombConfig", "DEFAULT_CONFIG", "ShardingConfig",
+    "HoneycombConfig", "DEFAULT_CONFIG", "ServiceConfig", "ShardingConfig",
     "ReplicationConfig", "REPLICA_POLICIES", "HoneycombTree",
     "HoneycombStore", "StoreShard", "StagedSync", "ShardedHoneycombStore",
     "ReplicaGroup", "FollowerReplica", "aggregate_stats",
     "uniform_int_boundaries", "bucket_pow2",
     "PIPELINE_MODES", "PipelineStats",
+    "Get", "Scan", "Put", "Update", "Delete", "Response", "Ticket",
+    "Routing", "HoneycombService", "decode_wire", "decode_wire_stream",
+    "wire_entry_nbytes", "WIRE_ENTRY_OVERHEAD",
     "TreeSnapshot", "SnapshotDelta", "ScanResult", "GetResult",
     "apply_snapshot_delta", "batched_get", "batched_scan",
     "descend", "log_sort_positions", "OutOfOrderScheduler", "Request",

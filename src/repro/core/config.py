@@ -148,6 +148,29 @@ class ShardingConfig:
                 "shard boundaries must be strictly ascending")
 
 
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Serving-front-end knobs for ``HoneycombService`` (core/api.py).
+
+    ``batch_size`` is the dense device-batch target the scheduler fills per
+    (shard, replica, kind, cost_class) bucket; ``cost_classes`` the
+    expected-work buckets SCANs are split into; ``pipeline`` the epoch
+    composition (``"serial"`` models the blocking sync barrier,
+    ``"pipelined"`` overlaps standby staging with read dispatch — see
+    core/pipeline.py)."""
+    batch_size: int = 256
+    cost_classes: tuple[int, ...] = (1, 4, 16, 64)
+    pipeline: str = "serial"
+
+    def __post_init__(self):
+        assert self.batch_size >= 1, "batch_size must be >= 1"
+        assert self.cost_classes, "need at least one cost class"
+        from .pipeline import PIPELINE_MODES
+        assert self.pipeline in PIPELINE_MODES, (
+            f"unknown pipeline mode {self.pipeline!r} "
+            f"(one of {PIPELINE_MODES})")
+
+
 # read-spreading policies for replicated shards (core/replica.py):
 #   "primary_only" — every read serves from the primary (replication off the
 #                    read path; the replicas=1 equivalence baseline);

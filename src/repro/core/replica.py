@@ -68,6 +68,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from .api import Routing
 from .config import ReplicationConfig
 from .read_path import TreeSnapshot
 from .shard import (StagedSync, StoreShard, SyncStats, _DELTA_BACKEND,
@@ -153,6 +154,14 @@ class ReplicaGroup:
         self.lagging_skips = 0         # batches redirected off a stale follower
         self.replication_s = 0.0       # wall time spent feeding followers
         self._primary_served = 0       # device requests the primary served
+        # read-spreading policy state (the pick lives HERE; the router
+        # delegates): round_robin cursor, and least_loaded's pick-time
+        # assignment counts so submit-time bursts still spread
+        self._rr = 0
+        self._assigned = [0] * self.replication.replicas
+        # (replica_served, serving_version) of the latest device batch —
+        # the stamp the scheduler reads right after each dispatch
+        self.last_dispatch: tuple[int, int] = (0, 0)
         primary.on_staged = self._on_primary_staged
         primary.on_flip = self._on_primary_flip
         if not fresh and self.followers and primary._snapshot is not None:
@@ -225,6 +234,39 @@ class ReplicaGroup:
         f.sync_stats.bytes_synced += _snapshot_nbytes(snap)
 
     # ------------------------------------------------- replica dispatch
+    def replica_for_dispatch(self) -> int:
+        """Read-spreading policy pick for the next read batch —
+        ``primary_only`` always serves the primary, ``round_robin`` rotates
+        over the currently ELIGIBLE replicas, ``least_loaded`` picks the
+        eligible replica with the fewest pick-time assignments.  The pick
+        is a ROUTING decision only; dispatch still enforces the freshness
+        rule (a lagging follower is skipped, never served stale)."""
+        if (self.replication.policy == "primary_only"
+                or self.n_replicas == 1):
+            return 0
+        elig = self.eligible_replicas()        # always contains the primary
+        if self.replication.policy == "round_robin":
+            r = elig[self._rr % len(elig)]
+            self._rr += 1
+            return r
+        # least_loaded: fewest batches assigned so far (assignment counts
+        # move at pick time, so a burst of submit-time picks still spreads)
+        r = min(elig, key=self._assigned.__getitem__)
+        self._assigned[r] += 1
+        return r
+
+    def routing(self) -> Routing:
+        """Single-shard replicated wiring for the service (core/api.py):
+        shard 0 everywhere, the group's own read-spreading pick, reads
+        stamped with the serving replica + its snapshot read version."""
+        return Routing(
+            shard_of=lambda key: 0,
+            replica_of=((lambda shard: self.replica_for_dispatch())
+                        if self.n_replicas > 1 else None),
+            report=lambda shard: self.last_dispatch,
+            live_version=lambda shard: int(
+                self.primary.tree.versions.read_version()))
+
     def eligible_replicas(self) -> list[int]:
         """Replica indices a read batch may be pinned to right now: the
         primary always, plus every follower that is unpaused and whose
@@ -275,8 +317,14 @@ class ReplicaGroup:
             return []
         f = self._serving_follower(replica, len(keys))
         if f is None:
-            return self.primary.get_batch(keys)
-        return self.primary._device_get(f.snapshot, keys)
+            res = self.primary.get_batch(keys)
+            self.last_dispatch = (0, self.primary.serving_version)
+            return res
+        res = self.primary._device_get(f.snapshot, keys)
+        self.last_dispatch = (f.replica_id,
+                              f.snapshot_rv if f.snapshot_rv is not None
+                              else 0)
+        return res
 
     def scan_batch(self, ranges, replica: int | None = None):
         ranges = list(ranges)
@@ -284,11 +332,17 @@ class ReplicaGroup:
             return []
         f = self._serving_follower(replica, len(ranges))
         if f is None:
-            return self.primary.scan_batch(ranges)
+            res = self.primary.scan_batch(ranges)
+            self.last_dispatch = (0, self.primary.serving_version)
+            return res
         # eligibility pinned the follower at the primary snapshot's read
         # version, so truncated-scan host fallbacks use the primary's rule
-        return self.primary._device_scan(f.snapshot, ranges,
-                                         self.primary._fallback_read_version())
+        res = self.primary._device_scan(f.snapshot, ranges,
+                                        self.primary._fallback_read_version())
+        self.last_dispatch = (f.replica_id,
+                              f.snapshot_rv if f.snapshot_rv is not None
+                              else 0)
+        return res
 
     # ------------------------------------------------------------- meters
     @property

@@ -48,6 +48,7 @@ import contextlib
 import dataclasses
 from typing import Sequence
 
+from .api import Routing
 from .btree import TreeStats
 from .config import HoneycombConfig, ReplicationConfig, ShardingConfig
 from .keys import int_key
@@ -116,15 +117,6 @@ class ShardedHoneycombStore:
                          self.replication)
             for i in range(n)]
         self.shard_ops = [0] * n    # routed requests per shard (imbalance)
-        # round_robin cursor PER SHARD: a shared cursor advanced once per
-        # shard inside a multi-shard batch would keep a fixed parity and
-        # never actually rotate any shard's assignment
-        self._rr = [0] * n
-        # least_loaded spreads by ASSIGNED batches, not served requests:
-        # served_ops only advances at dispatch, so a submit-time picker
-        # (the scheduler pins replicas at submit) would otherwise send a
-        # whole epoch's burst to one replica before any counter moved
-        self._assigned = [[0] * self.replication.replicas for _ in range(n)]
 
     @property
     def n_shards(self) -> int:
@@ -147,31 +139,24 @@ class ShardedHoneycombStore:
         return lo if s == s_lo else self.boundaries[s - 1]
 
     def replica_for_dispatch(self, shard: int) -> int:
-        """Read-spreading policy: pick the replica the next read batch for
-        ``shard`` is pinned to.  ``primary_only`` always serves the primary;
-        ``round_robin`` rotates over the replica set; ``least_loaded`` picks
-        the replica that has served the fewest requests.  The pick is a
-        ROUTING decision only — the group still enforces the freshness rule
-        at dispatch (a lagging follower is skipped, never served stale).
-        Both spreading policies pick over the currently ELIGIBLE replicas,
-        so a paused/lagging follower is routed around instead of eating a
-        redirect (and, for least_loaded, soaking up assignments it never
-        serves) on every turn."""
-        group = self.shards[shard]
-        if (self.replication.policy == "primary_only"
-                or group.n_replicas == 1):
-            return 0
-        elig = group.eligible_replicas()       # always contains the primary
-        if self.replication.policy == "round_robin":
-            r = elig[self._rr[shard] % len(elig)]
-            self._rr[shard] += 1
-            return r
-        # least_loaded: fewest batches assigned so far (assignment counts
-        # move at pick time, so a burst of submit-time picks still spreads)
-        assigned = self._assigned[shard]
-        r = min(elig, key=assigned.__getitem__)
-        assigned[r] += 1
-        return r
+        """Read-spreading policy pick for ``shard``'s next read batch —
+        delegated to the shard's ``ReplicaGroup`` (the cursor/assignment
+        state is per group, so a batch spanning N shards rotates EVERY
+        shard's assignment instead of freezing on cursor parity).  The pick
+        is a ROUTING decision only; the group still enforces the freshness
+        rule at dispatch (a lagging follower is skipped, never stale)."""
+        return self.shards[shard].replica_for_dispatch()
+
+    def routing(self) -> Routing:
+        """The routed-store wiring for the service/scheduler (core/api.py):
+        range ownership, per-shard replica spreading, and read-response
+        stamps from the serving group's latest dispatch."""
+        return Routing(
+            shard_of=self.shard_for_key,
+            replica_of=self.replica_for_dispatch,
+            report=lambda shard: self.shards[shard].last_dispatch,
+            live_version=lambda shard: int(
+                self.shards[shard].tree.versions.read_version()))
 
     # ------------------------------------------------------------- writes
     def put(self, key: bytes, value: bytes, thread: int = 0):

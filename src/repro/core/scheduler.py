@@ -5,13 +5,24 @@ The FPGA avoids head-of-line blocking by letting requests complete out of
 order.  In SPMD execution the whole batch advances in lock step, so the
 equivalent straggler mitigation is *batch composition*: read requests are
 bucketed by ``(shard, replica, kind, cost_class)`` — owning range-shard
-first, then the replica the router's read-spreading policy assigned
+first, then the replica the store's read-spreading policy assigned
 (core/replica.py; replica 0 — the primary — when the store is not
 replicated), then expected work (scan width) — so a vectorized step is
 neither held hostage by one expensive lane nor scattered across device
 snapshots, and responses are re-ordered back to arrival order on
 completion: out-of-order execution with in-order delivery, exactly the
 accelerator's contract.
+
+Requests are TYPED OPS (core/api.py): ``submit_op`` takes a ``Get`` /
+``Scan`` / ``Put`` / ``Update`` / ``Delete`` message and the internal
+``Request`` is a thin envelope — rid + op + routing pins (shard, replica).
+The stringly ``submit(kind, key, ...)`` facade remains as a shim that
+builds the op and delegates, so both APIs share ONE execution path
+(tested op-for-op identical, including sync byte counts).  Routing comes
+from the STORE — pass ``routing=store.routing()`` (the ``HoneycombService``
+wires it automatically); callers no longer thread ``shard_of`` /
+``replica_of`` callbacks by hand.  With no routing, everything buckets to
+shard 0, which reproduces the unsharded behaviour exactly.
 
 Writes are first-class requests too.  One ``run()`` performs the serving
 stack's full cycle as three EXPLICIT pipeline stages (the design doc lives
@@ -41,54 +52,67 @@ in core/pipeline.py):
     blocks.  Results and sync byte counts are identical to serial mode by
     construction (reads always execute against the flipped epoch).
 
-Bucketing by shard requires a routing function: pass
-``shard_of=router.shard_for_key`` when driving a ``ShardedHoneycombStore``;
-the default routes everything to shard 0, which reproduces the unsharded
-behaviour exactly.  Read spreading over replicas likewise: pass
-``replica_of=router.replica_for_dispatch`` and each read is pinned to a
-replica AT SUBMIT (so batches stay replica-homogeneous); dispatch forwards
-the pin to the store, whose replica group still enforces the freshness
-rule (a lagging follower is skipped, never served stale).  In
-``pipeline="pipelined"`` mode ``stage_export`` stages all replicas of a
-dirty shard concurrently — the group's ``begin_export`` hook enqueues one
-standby scatter per replica lane before any flip.
+``run_ops()`` resolves every request to a stamped ``Response`` (status,
+value/items, the serving replica, and the read version the answering
+snapshot served at — the linearizability stamp); ``run()`` is the legacy
+shim that unwraps responses to bare values.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import defaultdict
-from typing import Any, Callable, Iterable, Sequence
+from typing import Any, Iterable, Sequence
 
 import jax
 
+from .api import (NOT_FOUND, OK, OPS_BY_KIND, WRITE_KINDS, Op, Response,
+                  Routing, Scan)
 from .pipeline import PIPELINE_MODES, PipelineStats
-
-WRITE_KINDS = ("put", "update", "delete")
 
 _now = time.perf_counter
 
 
 @dataclasses.dataclass
 class Request:
+    """Thin envelope around one submitted op: the sequence number plus the
+    routing pins (owning shard; replica assigned at submit so batches stay
+    replica-homogeneous).  The legacy field views (kind/key/hi/value/
+    expected_items) read through to the op."""
     rid: int
-    kind: str                  # "get" | "scan" | "put" | "update" | "delete"
-    key: bytes = b""
-    hi: bytes = b""
-    value: bytes = b""
-    expected_items: int = 1
+    op: Op
+    shard: int = 0
     replica: int = 0           # replica the read is pinned to (0 = primary)
+
+    @property
+    def kind(self) -> str:
+        return self.op.KIND
+
+    @property
+    def key(self) -> bytes:
+        return self.op.route_key
+
+    @property
+    def hi(self) -> bytes:
+        return getattr(self.op, "hi", b"")
+
+    @property
+    def value(self) -> bytes:
+        return getattr(self.op, "value", b"")
+
+    @property
+    def expected_items(self) -> int:
+        return self.op.expected_items
 
 
 class OutOfOrderScheduler:
-    """Buckets read requests by (shard, replica, kind, cost class), queues
+    """Buckets read ops by (shard, replica, kind, cost class), queues
     writes in order, runs the admit/export/dispatch pipeline stages,
-    reassembles responses in arrival order."""
+    reassembles stamped responses in arrival order."""
 
     def __init__(self, batch_size: int = 256,
                  cost_classes: Sequence[int] = (1, 4, 16, 64),
-                 shard_of: Callable[[bytes], int] | None = None,
-                 replica_of: Callable[[int], int] | None = None,
+                 routing: Routing | None = None,
                  pipeline: str = "serial"):
         assert pipeline in PIPELINE_MODES, (
             f"unknown pipeline mode {pipeline!r} (one of {PIPELINE_MODES})")
@@ -96,13 +120,13 @@ class OutOfOrderScheduler:
         self.cost_classes = tuple(sorted(cost_classes))
         self.pipeline = pipeline
         self.stats = PipelineStats()
-        # routing function key -> owning shard; SCANs bucket by their lo key
-        # (the store facade still decomposes any cross-shard tail)
-        self._shard_of = shard_of or (lambda key: 0)
-        # read-spreading assignment shard -> replica (the router's policy);
-        # None pins everything to the primary and never forwards a pin, so
-        # stores without a replica parameter keep working unchanged
-        self._replica_of = replica_of
+        # store-provided wiring (store.routing() — core/api.py): key ->
+        # owning shard, the replica read-spreading pick, and the response
+        # stamps.  None routes everything to shard 0 and never forwards a
+        # replica pin, reproducing the unsharded/unreplicated behaviour.
+        self.routing = routing
+        self._shard_of = routing.shard_of if routing else (lambda key: 0)
+        self._replica_of = routing.replica_of if routing else None
         self._buckets: dict[tuple[int, int, str, int], list[Request]] = \
             defaultdict(list)
         self._writes: list[Request] = []
@@ -118,20 +142,43 @@ class OutOfOrderScheduler:
                 return c
         return self.cost_classes[-1]
 
-    def submit(self, kind: str, key: bytes, hi: bytes = b"",
-               value: bytes = b"", expected_items: int = 1) -> int:
+    def _resolve_routing(self, store) -> Routing | None:
+        """Routing for the response stamps: the wired one, else ask the
+        store (every Honeycomb facade provides ``routing()``; a store
+        without one gets unstamped responses)."""
+        if self.routing is not None:
+            return self.routing
+        rt = getattr(store, "routing", None)
+        return rt() if callable(rt) else None
+
+    # --------------------------------------------------------- submission
+    def submit_op(self, op: Op) -> int:
+        """Submit one typed op (core/api.py); returns its sequence number.
+        Reads are pinned to (shard, replica) NOW so batches stay shard- and
+        replica-homogeneous; writes keep submission order."""
         rid = self._next_rid
         self._next_rid += 1
-        r = Request(rid, kind, key, hi, value, expected_items)
-        if kind in WRITE_KINDS:
+        r = Request(rid, op, shard=self._shard_of(op.route_key))
+        if op.IS_WRITE:
             self._writes.append(r)      # writes keep submission order
         else:
-            shard = self._shard_of(key)
             if self._replica_of is not None:
-                r.replica = self._replica_of(shard)
-            self._buckets[(shard, r.replica, kind,
+                r.replica = self._replica_of(r.shard)
+            self._buckets[(r.shard, r.replica, op.KIND,
                            self._cost_class(r))].append(r)
         return rid
+
+    def submit(self, kind: str, key: bytes, hi: bytes = b"",
+               value: bytes = b"", expected_items: int = 1) -> int:
+        """Legacy stringly facade — builds the typed op and delegates to
+        ``submit_op`` (ONE execution path; tested op-for-op identical)."""
+        cls = OPS_BY_KIND.get(kind)
+        assert cls is not None, f"unknown request kind {kind!r}"
+        if cls is Scan:
+            return self.submit_op(Scan(key, hi, expected_items))
+        if cls.IS_WRITE and kind != "delete":
+            return self.submit_op(cls(key, value))
+        return self.submit_op(cls(key))
 
     def ready_batches(self, flush: bool = False
                       ) -> Iterable[tuple[str, list[Request]]]:
@@ -146,22 +193,22 @@ class OutOfOrderScheduler:
                 yield kind, batch
 
     # -------------------------------------------------------------- stages
-    def stage_admit(self, store) -> dict[int, Any]:
+    def stage_admit(self, store) -> dict[int, Response]:
         """Stage 1 — host-side write phase: every queued write in submission
-        order, routed by the store facade, no device sync in between (that
-        is the whole point) — each shard's own "every_k" policy is deferred
-        for the duration of the burst."""
+        order, applied by its op and routed by the store facade, no device
+        sync in between (that is the whole point) — each shard's own
+        "every_k" policy is deferred for the duration of the burst.  Write
+        responses are stamped with the host-tree version at which the
+        write became visible."""
         t0 = _now()
-        out: dict[int, Any] = {}
+        out: dict[int, Response] = {}
+        rt = self._resolve_routing(store) if self._writes else None
         with store.deferred_sync():
             for r in self._writes:
-                if r.kind == "put":
-                    store.put(r.key, r.value)
-                elif r.kind == "update":
-                    store.update(r.key, r.value)
-                else:
-                    store.delete(r.key)
-                out[r.rid] = None
+                r.op.apply(store)
+                out[r.rid] = Response(
+                    status=OK, shard=r.shard,
+                    serving_version=(rt.live_version(r.shard) if rt else 0))
         self.applied_writes += len(self._writes)
         self._writes.clear()
         self.stats.admit_s += _now() - t0
@@ -194,21 +241,26 @@ class OutOfOrderScheduler:
         self.stats.export_s += dt
         self.syncs += store.sync_stats.snapshots - before
 
-    def stage_dispatch(self, store, flush: bool = True) -> dict[int, Any]:
+    def stage_dispatch(self, store, flush: bool = True
+                       ) -> dict[int, Response]:
         """Stage 3 — consume ``ready_batches()``: dense, shard- and
         cost-homogeneous device batches, responses reassembled to arrival
-        order.  Device-lane occupancy is accumulated from the STORE's
-        meters (the shard is where ``bucket_pow2`` padding actually
-        happens, including the router's per-shard sub-batches and floor
-        back-fill probes), so it reflects real device lanes, not the
-        scheduler-level batch sizes."""
+        order and stamped from the store's serving report (the replica lane
+        that actually answered — a lagging-follower pin redirects to the
+        primary — and the read version of its snapshot).  Device-lane
+        occupancy is accumulated from the STORE's meters (the shard is
+        where ``bucket_pow2`` padding actually happens, including the
+        router's per-shard sub-batches and floor back-fill probes), so it
+        reflects real device lanes, not the scheduler-level batch sizes."""
         t0 = _now()
         ps = store.pipeline_stats
         lanes0, padded0 = ps.dispatched_lanes, ps.padded_lanes
-        out: dict[int, Any] = {}
+        rt = self._resolve_routing(store)
+        out: dict[int, Response] = {}
         for kind, batch in self.ready_batches(flush=flush):
             self.dispatched_batches += 1
             self.dispatched_requests += len(batch)
+            shard = batch[0].shard
             # batches are replica-homogeneous; forward the pin only when a
             # read-spreading policy is wired (plain stores take no replica)
             kw = ({"replica": batch[0].replica}
@@ -217,22 +269,40 @@ class OutOfOrderScheduler:
                 res = store.get_batch([r.key for r in batch], **kw)
             else:
                 res = store.scan_batch([(r.key, r.hi) for r in batch], **kw)
+            served, rv = (rt.report(shard) if rt is not None
+                          else (batch[0].replica, 0))
             for r, v in zip(batch, res):
-                out[r.rid] = v
+                if kind == "get":
+                    out[r.rid] = Response(
+                        status=OK if v is not None else NOT_FOUND,
+                        value=v, serving_version=rv, shard=shard,
+                        replica=served)
+                else:
+                    out[r.rid] = Response(
+                        status=OK, items=v, serving_version=rv,
+                        shard=shard, replica=served)
         ps = store.pipeline_stats
         self.stats.dispatched_lanes += ps.dispatched_lanes - lanes0
         self.stats.padded_lanes += ps.padded_lanes - padded0
         self.stats.dispatch_s += _now() - t0
         return out
 
-    def run(self, store, flush: bool = True) -> dict[int, Any]:
-        """Drive all pending requests through the store: one full pipeline
-        epoch — admit writes (in order), sync each dirty shard, dispatch the
-        batched read paths.  Returns {rid: response} with in-order semantics
-        per request id."""
+    # ---------------------------------------------------------- the epoch
+    def run_ops(self, store, flush: bool = True) -> dict[int, Response]:
+        """Drive all pending ops through the store: one full pipeline epoch
+        — admit writes (in order), sync each dirty shard, dispatch the
+        batched read paths.  Returns {rid: Response} with in-order
+        semantics per sequence number."""
         out = self.stage_admit(store)
         if out:
             self.stage_export(store)
         out.update(self.stage_dispatch(store, flush=flush))
         self.stats.runs += 1
         return out
+
+    def run(self, store, flush: bool = True) -> dict[int, Any]:
+        """Legacy shim over ``run_ops``: same epoch, responses unwrapped to
+        bare values ({rid: value | items | None}) — byte-for-byte the
+        pre-service behaviour."""
+        return {rid: resp.unwrap()
+                for rid, resp in self.run_ops(store, flush=flush).items()}

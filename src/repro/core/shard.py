@@ -49,6 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .api import WIRE_ENTRY_OVERHEAD, Routing, wire_entry_nbytes
 from .btree import HoneycombTree
 from .cache import InteriorCache
 from .config import HoneycombConfig, bucket_pow2
@@ -72,10 +73,6 @@ _jit_apply_delta = jax.jit(apply_snapshot_delta, static_argnames="backend")
 
 # snapshot fields narrowed to int32 on device (host keeps 64-bit authority)
 _I32_FIELDS = frozenset({"version", "log_op", "log_hint", "log_vdelta"})
-
-# append-only log-entry wire format: op byte + u16 key length + u16 value
-# length per entry (key/value bytes are added on top)
-WIRE_ENTRY_OVERHEAD = 5
 
 _now = time.perf_counter
 
@@ -189,8 +186,9 @@ class StoreShard:
         self._snapshot_dirty = True
         self._writes_since_sync += 1
         self.sync_stats.log_entries += 1
-        self.sync_stats.log_wire_bytes += (len(key) + len(value)
-                                           + WIRE_ENTRY_OVERHEAD)
+        # the op wire encoder's exact size (core/api.py) — the meter and
+        # encode_wire() share one accounting and can never drift
+        self.sync_stats.log_wire_bytes += wire_entry_nbytes(key, value)
         if (self.cfg.sync_policy == "every_k"
                 and self._writes_since_sync >= self.cfg.sync_every_k
                 and not self._sync_deferred):
@@ -212,6 +210,23 @@ class StoreShard:
 
     def scan(self, lo: bytes, hi: bytes, max_items: int | None = None):
         return self.tree.scan(lo, hi, max_items)
+
+    # ------------------------------------------------------------ routing
+    @property
+    def serving_version(self) -> int:
+        """Read version of the active snapshot — what a device batch that
+        just dispatched here answered at (0 before the first publish)."""
+        return self._snapshot_rv if self._snapshot_rv is not None else 0
+
+    def routing(self) -> Routing:
+        """The single-shard wiring for the service/scheduler (core/api.py):
+        everything routes to shard 0, no replica spreading, reads stamped
+        with the active snapshot's read version."""
+        return Routing(
+            shard_of=lambda key: 0,
+            replica_of=None,
+            report=lambda shard: (0, self.serving_version),
+            live_version=lambda shard: int(self.tree.versions.read_version()))
 
     # ------------------------------------------------- snapshot mechanics
     def begin_export(self, force: bool = False, full: bool = False) -> bool:

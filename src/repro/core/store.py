@@ -24,10 +24,17 @@ The store stack is layered for scale-out:
 ``ShardedHoneycombStore(shards=1)`` is operation-for-operation equivalent
 to ``HoneycombStore`` (same results, same sync byte counts), which is the
 refactor's invariant and is enforced by tests/test_router.py.
+
+Every layer exposes the same ``routing()`` accessor, so the typed service
+front end (``HoneycombService``, core/api.py) can wrap ANY of them and
+self-wire the scheduler — callers submit ``Get``/``Scan``/``Put``/
+``Update``/``Delete`` ops and receive stamped ``Response``s.
 """
 from __future__ import annotations
 
-from .shard import StoreShard, SyncStats, WIRE_ENTRY_OVERHEAD
+from .shard import StoreShard, SyncStats, WIRE_ENTRY_OVERHEAD  # noqa: F401
+#   (WIRE_ENTRY_OVERHEAD now lives in core/api.py — the op wire codec —
+#    and is re-exported here for the historical import path)
 
 __all__ = ["HoneycombStore", "StoreShard", "SyncStats",
            "WIRE_ENTRY_OVERHEAD"]

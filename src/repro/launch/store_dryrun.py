@@ -23,12 +23,14 @@ Two halves keep the abstract model honest:
     epoch = max(stage), with per-stage occupancy;
   * ``live_sharded_smoke()`` drives a small live ShardedHoneycombStore
     through the identical shape (range partition, per-shard delta sync
-    plus one pipelined scheduler epoch with independent per-shard flips,
+    plus one pipelined service epoch — typed op messages through
+    ``HoneycombService``, core/api.py — with independent per-shard flips,
     cross-shard scan stitching) and reports per-shard sync traffic and
     router load imbalance — the measured twin of the modeled numbers;
     ``live_replicated_smoke()`` adds the replication axis (follower
     replicas fed by primary deltas, round-robin read spreading, lag and
-    amplification meters — core/replica.py).
+    amplification meters, per-response replica/serving-version stamps —
+    core/replica.py, core/api.py).
 
 Usage: PYTHONPATH=src python -m repro.launch.store_dryrun
 """
@@ -42,8 +44,8 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core import (HoneycombConfig, OutOfOrderScheduler,
-                        ReplicationConfig, ShardedHoneycombStore,
+from repro.core import (Get, HoneycombConfig, HoneycombService, Put,
+                        ReplicationConfig, ShardedHoneycombStore, Update,
                         uniform_int_boundaries)
 from repro.core.keys import int_key
 from repro.core.read_path import (NODE_FIELDS, SnapshotDelta, TreeSnapshot,
@@ -193,17 +195,16 @@ def live_sharded_smoke(shards: int = 4, n_items: int = 1024,
         st.update(int_key(k % lo_shard), b"u" * 12)
     st.export_snapshot()
     dirty = [s.snapshots - b for s, b in zip(st.per_shard_sync_stats, snaps0)]
-    # one pipelined scheduler epoch: staged standby scatters + independent
+    # one pipelined service epoch (typed op messages, routing self-wired
+    # from the store — core/api.py): staged standby scatters + independent
     # per-shard flips + immediate read dispatch (measured twin of
     # pipeline_occupancy_model)
-    sched = OutOfOrderScheduler(batch_size=batch,
-                                shard_of=st.shard_for_key,
-                                pipeline="pipelined")
-    for k in range(batch):
-        sched.submit("update", int_key(int(rng.integers(0, n_items))),
-                     value=b"p" * 12)
-        sched.submit("get", int_key(int(rng.integers(0, n_items))))
-    sched.run(st)
+    svc = HoneycombService(st, batch_size=batch, pipeline="pipelined")
+    svc.submit_many(
+        op for k in range(batch)
+        for op in (Update(int_key(int(rng.integers(0, n_items))), b"p" * 12),
+                   Get(int_key(int(rng.integers(0, n_items))))))
+    svc.drain()
     agg = st.sync_stats
     ps = st.pipeline_stats
     return {
@@ -219,8 +220,8 @@ def live_sharded_smoke(shards: int = 4, n_items: int = 1024,
         "pipelined_epoch": {
             "per_shard_epochs": st.per_shard_epochs,
             "staged_exports": ps.staged_exports, "flips": ps.flips,
-            "sync_stall_s": sched.stats.sync_stall_s,
-            "lane_occupancy": sched.stats.lane_occupancy,
+            "sync_stall_s": svc.stats.sync_stall_s,
+            "lane_occupancy": svc.stats.lane_occupancy,
         },
     }
 
@@ -242,18 +243,18 @@ def live_replicated_smoke(shards: int = 2, replicas: int = 2,
     for i in rng.permutation(n_items):
         st.put(int_key(int(i)), b"v" * 12)
     st.export_snapshot()                 # primaries + followers resident
-    sched = OutOfOrderScheduler(batch_size=batch // 2,
-                                shard_of=st.shard_for_key,
-                                replica_of=st.replica_for_dispatch,
-                                pipeline="pipelined")
-    for k in range(batch):
-        sched.submit("update", int_key(int(rng.integers(0, n_items))),
-                     value=b"r" * 12)
-        sched.submit("get", int_key(int(rng.integers(0, n_items))))
-        sched.submit("get", int_key(int(rng.integers(0, n_items))))
-    sched.run(st)
+    svc = HoneycombService(st, batch_size=batch // 2, pipeline="pipelined")
+    tickets = svc.submit_many(
+        op for k in range(batch)
+        for op in (Update(int_key(int(rng.integers(0, n_items))), b"r" * 12),
+                   Get(int_key(int(rng.integers(0, n_items)))),
+                   Get(int_key(int(rng.integers(0, n_items))))))
+    svc.drain()
+    reads = [t.result() for t in tickets if not t.op.IS_WRITE]
     return {
         "shards": shards, "replicas": replicas, "items": n_items,
+        "served_replica_lanes": sorted({r.replica for r in reads}),
+        "serving_versions": sorted({r.serving_version for r in reads}),
         "per_shard_replica_ops": st.per_shard_replica_ops,
         "replica_load_imbalance": st.replica_load_imbalance,
         "replication_bytes": st.replication_bytes,

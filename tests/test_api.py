@@ -1,0 +1,334 @@
+"""Typed request/response service API (core/api.py): wire-format
+roundtrips and the exact encoder-vs-meter agreement, the legacy
+stringly-submit shim's op-for-op equivalence (results AND sync byte
+counts), the service-vs-direct-facade differential grid over
+{shards} x {replicas} x {pipeline}, and end-to-end linearizability of the
+serving-version stamps (monotone per key, follower answers cover the
+primary's serving version, lagging followers exercised via the freshness
+backstop)."""
+import numpy as np
+import pytest
+
+from repro.core import (Delete, Get, HoneycombConfig, HoneycombService,
+                        HoneycombStore, OutOfOrderScheduler, Put,
+                        ReplicaGroup, ReplicationConfig, Scan, ServiceConfig,
+                        ShardedHoneycombStore, StoreShard, Update,
+                        WIRE_ENTRY_OVERHEAD, decode_wire, decode_wire_stream,
+                        uniform_int_boundaries, wire_entry_nbytes)
+from repro.core.keys import int_key
+
+SMALL = HoneycombConfig(node_cap=16, log_cap=4, n_shortcuts=4)
+KEYSPACE = 200
+
+
+def make_store(shards: int, replicas: int):
+    if shards == 1 and replicas == 1:
+        return HoneycombStore(SMALL, heap_capacity=256)
+    return ShardedHoneycombStore(
+        SMALL, heap_capacity=256, shards=shards,
+        boundaries=(uniform_int_boundaries(KEYSPACE, shards)
+                    if shards > 1 else None),
+        replication=ReplicationConfig(
+            replicas, "round_robin" if replicas > 1 else "primary_only"))
+
+
+def random_ops(rng, n, key_space=KEYSPACE):
+    """One randomized GET/SCAN/PUT/UPDATE/DELETE mix as typed ops."""
+    ops = []
+    for _ in range(n):
+        k = int(rng.integers(0, key_space))
+        p = rng.random()
+        if p < 0.25:
+            ops.append(Put(int_key(k), b"v%03d" % k))
+        elif p < 0.35:
+            ops.append(Update(int_key(k), b"u%03d" % k))
+        elif p < 0.45:
+            ops.append(Delete(int_key(k)))
+        elif p < 0.8:
+            ops.append(Get(int_key(k)))
+        else:
+            ops.append(Scan(int_key(k), int_key(min(k + 7, key_space - 1)),
+                            expected_items=8))
+    return ops
+
+
+# ------------------------------------------------------------- wire format
+def test_wire_roundtrip_every_op_type():
+    """encode_wire/decode_wire are exact inverses for all five op types,
+    and write-op encodings are exactly the metered log-entry size."""
+    ops = [Get(b"k" * 31), Scan(b"", b"\xff" * 8, 17), Scan(b"a", b"a"),
+           Put(b"key", b"value" * 3), Put(b"k", b""), Update(b"u", b"w"),
+           Delete(b"gone"), Get(b"")]
+    for op in ops:
+        enc = op.encode_wire()
+        dec, off = decode_wire(enc)
+        assert dec == op
+        assert off == len(enc)
+        if op.IS_WRITE:
+            assert len(enc) == wire_entry_nbytes(
+                op.key, getattr(op, "value", b""))
+    with pytest.raises(Exception):
+        decode_wire(b"\x99\x00\x01\x00\x00X")     # unknown op code
+    with pytest.raises(AssertionError):
+        decode_wire(Put(b"key", b"value").encode_wire()[:-2])  # truncated
+    with pytest.raises(AssertionError):
+        Put(b"k", b"x" * 70000).encode_wire()     # over the u16 field limit
+    with pytest.raises(AssertionError):
+        Scan(b"a", b"z", expected_items=70000).encode_wire()
+
+
+def test_wire_stream_roundtrip():
+    """A concatenated entry stream (the replica log-replay feed shape)
+    decodes back op-for-op, offsets chaining exactly."""
+    rng = np.random.default_rng(3)
+    ops = random_ops(rng, 60)
+    stream = b"".join(op.encode_wire() for op in ops)
+    assert decode_wire_stream(stream) == ops
+
+
+def test_wire_encoder_agrees_with_log_wire_meter_on_log_block_traffic():
+    """The exact encoder reproduces the store's ``log_wire_bytes`` meter on
+    benchmarks/log_block.py's sync-traffic workload: the former estimate is
+    now the same shared accounting (``wire_entry_nbytes``)."""
+    from benchmarks.log_block import WRITE_BATCHES, sync_traffic_curve
+    n_items = 256
+    st = HoneycombStore(HoneycombConfig(log_cap=8), heap_capacity=2048)
+    load_rng = np.random.default_rng(0)
+    load_ops = [Put(int_key(int(i)), b"v" * 16)
+                for i in load_rng.permutation(n_items)]
+    for op in load_ops:
+        op.apply(st)
+    assert st.sync_stats.log_wire_bytes == sum(
+        len(op.encode_wire()) for op in load_ops)
+    w0 = st.sync_stats.log_wire_bytes
+    curve = sync_traffic_curve(st, n_items)
+    # replay the exact op stream sync_traffic_curve generates (seed 23)
+    rng = np.random.default_rng(23)
+    total = 0
+    for w in WRITE_BATCHES:
+        batch_bytes = sum(
+            len(Update(int_key(int(k)), b"u" * 16).encode_wire())
+            for k in rng.integers(0, n_items, w))
+        assert curve[w]["wire_bytes"] == batch_bytes  # per-batch agreement
+        total += batch_bytes
+    assert st.sync_stats.log_wire_bytes - w0 == total
+    # the historical constant still matches the codec header
+    assert WIRE_ENTRY_OVERHEAD == 5
+    assert wire_entry_nbytes(b"12345678", b"x" * 16) == 5 + 8 + 16
+
+
+# ------------------------------------------------- legacy submit() shim
+def test_legacy_submit_shim_identical_to_op_path():
+    """The stringly ``submit(kind, ...)`` facade delegates to the op path:
+    op-for-op identical results AND sync byte counts versus the native
+    typed submission — extending the shards=1 / serial / replicas=1
+    invariant family to the API boundary."""
+    mk = lambda: ShardedHoneycombStore(
+        SMALL, heap_capacity=256, shards=2,
+        boundaries=uniform_int_boundaries(KEYSPACE, 2),
+        replication=ReplicationConfig(2, "round_robin"))
+    a, b = mk(), mk()
+    legacy = OutOfOrderScheduler(batch_size=8, routing=a.routing())
+    typed = OutOfOrderScheduler(batch_size=8, routing=b.routing())
+    rng = np.random.default_rng(11)
+    for round_ in range(3):
+        for op in random_ops(rng, 60):
+            if isinstance(op, Scan):
+                legacy.submit("scan", op.lo, op.hi,
+                              expected_items=op.expected_items)
+            elif op.IS_WRITE:
+                legacy.submit(op.KIND, op.key, value=getattr(op, "value",
+                                                             b""))
+            else:
+                legacy.submit("get", op.key)
+            typed.submit_op(op)
+        out_l = legacy.run(a)
+        out_t = typed.run(b)
+        assert out_l == out_t, round_
+        assert a.sync_stats == b.sync_stats, round_   # bytes included
+    assert a.sync_stats.delta_syncs > 0
+    assert legacy.dispatched_batches == typed.dispatched_batches
+    with pytest.raises(AssertionError):
+        legacy.submit("upsert", b"k")
+
+
+# ------------------------------------------------------- differential grid
+@pytest.mark.parametrize("shards,replicas,pipeline",
+                         [(s, r, p) for s in (1, 3) for r in (1, 2)
+                          for p in ("serial", "pipelined")])
+def test_service_equals_direct_facade(shards, replicas, pipeline):
+    """Randomized mixed workload through ``HoneycombService`` returns
+    exactly what direct facade calls on a twin store produce, across the
+    {shards} x {replicas} x {pipeline} grid."""
+    svc_store = make_store(shards, replicas)
+    ref = make_store(shards, replicas)
+    svc = HoneycombService(svc_store, batch_size=8, pipeline=pipeline)
+    rng = np.random.default_rng(1000 + shards * 10 + replicas)
+    for round_ in range(3):
+        ops = random_ops(rng, 40)
+        tickets = svc.submit_many(ops)
+        svc.drain()
+        # the direct-facade oracle replays the epoch the way the pipeline
+        # semantics define it: writes in submission order, one sync, reads
+        want = []
+        for op in ops:
+            if op.IS_WRITE:
+                op.apply(ref)
+        ref.export_snapshot()
+        for op in ops:
+            if isinstance(op, Get):
+                want.append(ref.get_batch([op.key])[0])
+            elif isinstance(op, Scan):
+                want.append(ref.scan_batch([(op.lo, op.hi)])[0])
+            else:
+                want.append(None)
+        for op, t, w in zip(ops, tickets, want):
+            r = t.result()
+            assert r.unwrap() == w, (round_, op)
+            if isinstance(op, Get):
+                assert r.ok == (w is not None)
+                assert 0 <= r.replica < replicas
+                assert r.shard == svc.routing.shard_of(op.key)
+    assert svc_store.sync_stats == ref.sync_stats  # same sync byte counts
+
+
+# -------------------------------------------------------- linearizability
+def assert_monotone_serving_versions(records):
+    """Linearizability helper: per key, the serving-version stamps never
+    regress in submission (rid) order — a later read can never observe an
+    older snapshot of that key than an earlier one did."""
+    last: dict = {}
+    for rid, key, resp in sorted(records, key=lambda t: t[0]):
+        prev = last.get(key)
+        assert prev is None or resp.serving_version >= prev, (
+            f"rid {rid}: key {key!r} served at {resp.serving_version} "
+            f"after {prev}")
+        last[key] = resp.serving_version
+    return last
+
+
+def test_serving_version_monotone_and_covers_primary():
+    """End-to-end linearizability of the stamps on a replicated store:
+    per-key serving versions are monotone across epochs, every follower
+    answer covers the primary's serving version, and a follower that lags
+    after its pin was assigned is redirected by the freshness backstop
+    (``lagging_skips``) with a FRESH stamp, never a stale one."""
+    st = ShardedHoneycombStore(
+        SMALL, heap_capacity=256, shards=1,
+        replication=ReplicationConfig(3, "round_robin"))
+    svc = HoneycombService(st, batch_size=4)
+    group = st.shards[0]
+    records = []
+    rng = np.random.default_rng(7)
+    follower_answers = 0
+    for round_ in range(4):
+        keys = [int(k) for k in rng.integers(0, 100, 12)]
+        svc.submit_many([Put(int_key(k), b"r%d-%03d" % (round_, k))
+                         for k in keys])
+        tickets = [(svc.submit(Get(int_key(k))), int_key(k))
+                   for k in keys]
+        svc.drain()
+        prim_v = group.primary.serving_version
+        for t, key in tickets:
+            r = t.result()
+            records.append((t.rid, key, r))
+            assert r.value == b"r%d-%03d" % (round_, int.from_bytes(
+                key, "big")), "reads observe this epoch's writes"
+            # every answer serves AT the primary's published version —
+            # follower answers COVER it (freshness rule), primary answers
+            # are it by definition
+            assert r.serving_version >= prim_v, (round_, r)
+            if r.replica > 0:
+                follower_answers += 1
+    assert follower_answers > 0            # spreading actually happened
+    assert_monotone_serving_versions(records)
+
+    # inject lag AFTER pins are assigned: submit reads (round-robin pins
+    # cover the followers), then pause a follower and advance the primary
+    # an epoch behind its back — the pinned batches must redirect
+    tickets = [(svc.submit(Get(int_key(k))), int_key(k))
+               for k in range(0, 100, 9)]
+    group.pause_follower(1)
+    group.pause_follower(2)
+    for k in range(0, 100, 9):
+        st.put(int_key(k), b"fresh%03d" % k)
+    st.export_snapshot()                   # followers miss this epoch
+    skips0 = st.lagging_skips
+    svc.drain()
+    assert st.lagging_skips > skips0
+    prim_v = group.primary.serving_version
+    for t, key in tickets:
+        r = t.result()
+        records.append((t.rid, key, r))
+        assert r.replica == 0              # redirected to the primary
+        assert r.serving_version >= prim_v
+        assert r.value == b"fresh%03d" % int.from_bytes(key, "big")
+    assert_monotone_serving_versions(records)
+
+
+def test_write_responses_stamped_with_visibility_version():
+    """Write responses carry the host-tree version at which the write
+    became visible; a later read's serving version covers it."""
+    st = HoneycombStore(SMALL, heap_capacity=256)
+    svc = HoneycombService(st, batch_size=8)
+    wt = svc.submit(Put(int_key(1), b"a"))
+    rt = svc.submit(Get(int_key(1)))
+    svc.drain()
+    assert wt.result().ok and wt.result().serving_version > 0
+    assert rt.result().serving_version >= wt.result().serving_version
+
+
+# ------------------------------------------------------- service mechanics
+def test_service_wraps_every_facade_layer():
+    """routing() is provided by all three layers — plain store, bare
+    replica group, sharded router — and the service self-wires each."""
+    # plain shard facade
+    plain = HoneycombStore(SMALL, heap_capacity=256)
+    s1 = HoneycombService(plain, batch_size=4)
+    s1.submit_many([Put(int_key(i), b"p%d" % i) for i in range(20)])
+    s1.drain()
+    t = s1.submit(Get(int_key(7)))
+    assert t.result().value == b"p7"
+    assert t.result().shard == 0 and t.result().replica == 0
+    # bare replica group (no router in front)
+    group = ReplicaGroup(StoreShard(SMALL, heap_capacity=256),
+                         ReplicationConfig(2, "round_robin"))
+    s2 = HoneycombService(group, batch_size=4)
+    s2.submit_many([Put(int_key(i), b"g%d" % i) for i in range(40)])
+    s2.drain()
+    tickets = s2.submit_many([Get(int_key(i)) for i in range(0, 40, 2)])
+    s2.drain()
+    assert [t.result().value for t in tickets] \
+        == [b"g%d" % i for i in range(0, 40, 2)]
+    assert {t.result().replica for t in tickets} == {0, 1}  # spread happened
+    # sharded router
+    sh = make_store(3, 1)
+    s3 = HoneycombService(sh, batch_size=4)
+    s3.submit_many([Put(int_key(i), b"s%d" % i) for i in range(0, 200, 5)])
+    s3.drain()
+    span = s3.submit(Scan(int_key(1), int_key(198), expected_items=32))
+    got = span.result()                    # result() drains on demand
+    assert got.ok and len(got.items) > 0
+    assert got.items == sh.scan_batch([(int_key(1), int_key(198))])[0]
+
+
+def test_ticket_result_drains_on_demand_and_pending_counts():
+    st = HoneycombStore(SMALL, heap_capacity=256)
+    svc = HoneycombService(st)
+    svc.submit(Put(int_key(5), b"v"))
+    t = svc.submit(Get(int_key(5)))
+    assert not t.done and svc.pending == 2
+    assert t.result().value == b"v"        # implicit drain
+    assert t.done and svc.pending == 0
+    assert t.result() is t.result()        # resolved once, cached
+
+
+def test_service_config_validation():
+    with pytest.raises(AssertionError):
+        ServiceConfig(pipeline="warp")
+    with pytest.raises(AssertionError):
+        ServiceConfig(batch_size=0)
+    st = HoneycombStore(SMALL, heap_capacity=256)
+    svc = HoneycombService(st, cfg=ServiceConfig(batch_size=16),
+                           pipeline="pipelined")
+    assert svc.cfg.batch_size == 16 and svc.cfg.pipeline == "pipelined"

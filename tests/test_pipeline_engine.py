@@ -152,9 +152,9 @@ def test_pipelined_equals_serial_randomized():
                               boundaries=B4)
     b = ShardedHoneycombStore(SMALL, heap_capacity=256, shards=4,
                               boundaries=B4)
-    sa = OutOfOrderScheduler(batch_size=8, shard_of=a.shard_for_key,
+    sa = OutOfOrderScheduler(batch_size=8, routing=a.routing(),
                              pipeline="serial")
-    sb = OutOfOrderScheduler(batch_size=8, shard_of=b.shard_for_key,
+    sb = OutOfOrderScheduler(batch_size=8, routing=b.routing(),
                              pipeline="pipelined")
     rng = np.random.default_rng(17)
     for round_ in range(4):
@@ -179,9 +179,9 @@ def test_serial_run_matches_legacy_inline_sequence():
                               boundaries=B4)
     b = ShardedHoneycombStore(SMALL, heap_capacity=256, shards=4,
                               boundaries=B4)
-    sched = OutOfOrderScheduler(batch_size=8, shard_of=a.shard_for_key,
+    sched = OutOfOrderScheduler(batch_size=8, routing=a.routing(),
                                 pipeline="serial")
-    legacy = OutOfOrderScheduler(batch_size=8, shard_of=b.shard_for_key)
+    legacy = OutOfOrderScheduler(batch_size=8, routing=b.routing())
     rng = np.random.default_rng(5)
     submit_random_mixed((sched, legacy), rng, 90)
     out = sched.run(a)

@@ -285,8 +285,7 @@ def test_scheduler_buckets_by_replica_and_spreads_reads():
     for i in range(100):
         st.put(int_key(i), b"v%d" % i)
     st.export_snapshot()
-    sched = OutOfOrderScheduler(batch_size=4, shard_of=st.shard_for_key,
-                                replica_of=st.replica_for_dispatch)
+    sched = OutOfOrderScheduler(batch_size=4, routing=st.routing())
     rids = {sched.submit("get", int_key(i * 7 % 100)): i * 7 % 100
             for i in range(16)}
     out = sched.run(st)
@@ -298,8 +297,7 @@ def test_scheduler_buckets_by_replica_and_spreads_reads():
     ops = st.shards[0].replica_ops
     assert ops == [8, 8]
     # writes interleave correctly and the pipelined export feeds replicas
-    sched2 = OutOfOrderScheduler(batch_size=4, shard_of=st.shard_for_key,
-                                 replica_of=st.replica_for_dispatch,
+    sched2 = OutOfOrderScheduler(batch_size=4, routing=st.routing(),
                                  pipeline="pipelined")
     for i in range(8):
         sched2.submit("update", int_key(i), value=b"w%d" % i)
@@ -382,8 +380,7 @@ def test_scheduler_least_loaded_spreads_within_a_burst():
     for i in range(100):
         st.put(int_key(i), b"v%d" % i)
     st.export_snapshot()
-    sched = OutOfOrderScheduler(batch_size=4, shard_of=st.shard_for_key,
-                                replica_of=st.replica_for_dispatch)
+    sched = OutOfOrderScheduler(batch_size=4, routing=st.routing())
     rids = {sched.submit("get", int_key(i * 3 % 100)): i * 3 % 100
             for i in range(16)}
     out = sched.run(st)

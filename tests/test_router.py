@@ -162,7 +162,7 @@ def test_sharded_scheduler_buckets_and_per_shard_sync():
     for i in range(200):
         sh.put(int_key(i), b"v%d" % i)
     sh.export_snapshot()
-    sched = OutOfOrderScheduler(batch_size=8, shard_of=sh.shard_for_key)
+    sched = OutOfOrderScheduler(batch_size=8, routing=sh.routing())
     rng = np.random.default_rng(2)
     gets = {}
     for _ in range(40):
@@ -198,7 +198,7 @@ def test_run_consumes_ready_batches():
     for i in range(200):
         sh.put(int_key(i), b"x")
     sh.export_snapshot()
-    sched = OutOfOrderScheduler(batch_size=4, shard_of=sh.shard_for_key)
+    sched = OutOfOrderScheduler(batch_size=4, routing=sh.routing())
     for i in (0, 1, 2, 3, 120, 121):            # full shard-0, partial shard-1
         sched.submit("get", int_key(i))
     out = sched.run(sh, flush=False)
