@@ -94,6 +94,10 @@ def sync_traffic(store) -> dict:
             "read_version_updates": s.read_version_updates,
             "log_entries": s.log_entries,
             "log_wire_bytes": s.log_wire_bytes,
+            # node-image DMA meters (core/schema.py packed layout: ONE
+            # contiguous image-row DMA per dirty node; legacy: one per field)
+            "image_dma_count": s.image_dma_count,
+            "image_bytes": s.image_bytes,
             # replica-amplification traffic (follower delta feed; 0 for the
             # unreplicated store, which has no replication machinery)
             "replication_bytes": getattr(store, "replication_bytes", 0),
@@ -102,7 +106,8 @@ def sync_traffic(store) -> dict:
 
 _SYNC_DIFF_KEYS = ("bytes_synced", "snapshots", "full_syncs", "delta_syncs",
                    "pagetable_commands", "read_version_updates",
-                   "log_entries", "log_wire_bytes", "replication_bytes")
+                   "log_entries", "log_wire_bytes", "image_dma_count",
+                   "image_bytes", "replication_bytes")
 
 
 def run_mixed(store, sampler, *, n_ops: int, read_frac: float,

@@ -12,7 +12,11 @@ sweeps the scheduler's epoch-pipeline modes for the sections that drive it
 time.  ``--replicas 1,2,4`` sweeps per-shard replica counts for the
 replicated read-spreading sections (YCSB), reporting the
 read-throughput-vs-replicas and sync-bytes-amplification curves.
-``--tiny`` shrinks every section's workload for CI smoke runs.  A summary
+``--layout packed,legacy`` sweeps the device-resident snapshot layout for
+the sections that meter node-image DMA traffic (log-block), comparing the
+packed one-DMA-per-dirty-node format against the legacy per-field scatters
+on identical traffic.  ``--tiny`` shrinks every section's workload for CI
+smoke runs.  A summary
 table of every section's sync meters (log entries, wire bytes, sync bytes,
 replica amplification) prints after the sweep.
 
@@ -70,14 +74,16 @@ def print_sync_summary(results: dict) -> None:
                              sync.get("log_entries", 0),
                              sync["log_wire_bytes"],
                              sync.get("bytes_synced", 0),
+                             sync.get("image_dma_count", 0),
                              sync.get("replication_bytes", 0)))
     if not rows:
         return
     print("# --- sync traffic summary ---")
     print(f"# {'run':<44} {'log_ents':>8} {'wire_B':>10} "
-          f"{'sync_B':>12} {'repl_B':>12}")
-    for name, ents, wire, synced, repl in rows:
-        print(f"# {name:<44} {ents:>8} {wire:>10} {synced:>12} {repl:>12}")
+          f"{'sync_B':>12} {'img_dmas':>8} {'repl_B':>12}")
+    for name, ents, wire, synced, dmas, repl in rows:
+        print(f"# {name:<44} {ents:>8} {wire:>10} {synced:>12} "
+              f"{dmas:>8} {repl:>12}")
 
 
 def main() -> None:
@@ -95,6 +101,9 @@ def main() -> None:
                     help="comma-separated per-shard replica counts for the "
                          "read-spreading sections (e.g. 1,2,4); empty "
                          "skips the axis")
+    ap.add_argument("--layout", default="packed",
+                    help="comma-separated snapshot layouts to sweep for the "
+                         "layout-aware sections (e.g. packed,legacy)")
     ap.add_argument("--tiny", action="store_true",
                     help="shrink workloads to smoke-test sizes (CI)")
     ap.add_argument("--strict", action="store_true",
@@ -104,6 +113,7 @@ def main() -> None:
     shards = tuple(int(s) for s in args.shards.split(","))
     pipeline = tuple(m for m in args.pipeline.split(",") if m)
     replicas = tuple(int(r) for r in args.replicas.split(",") if r)
+    layout = tuple(m for m in args.layout.split(",") if m)
     only = tuple(t for t in (args.only or "").split(",") if t)
     results = {}
     for name, fn in SECTIONS:
@@ -117,6 +127,8 @@ def main() -> None:
             kwargs["pipeline"] = pipeline
         if "replicas" in params:
             kwargs["replicas"] = replicas
+        if "layout" in params and layout:
+            kwargs["layout"] = layout
         if args.tiny:
             kwargs.update({k: v for k, v in TINY.items() if k in params})
         print(f"# --- {name} ---", flush=True)

@@ -8,8 +8,13 @@
 #                              # submit_many + drain over a replicated
 #                              # sharded store, wire-codec roundtrip),
 #                              # serial-vs-pipelined YCSB+latency plus a
-#                              # --replicas 1,2 read-spreading sweep;
-#                              # results land in experiments/bench_results.json
+#                              # --replicas 1,2 read-spreading sweep, the
+#                              # log-block sweep on BOTH snapshot layouts
+#                              # (packed one-DMA-per-dirty-node vs legacy
+#                              # per-field), and both store_dryrun LIVE
+#                              # smokes (sharded + replicated) on the packed
+#                              # layout; results land in
+#                              # experiments/bench_results.json
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -19,7 +24,22 @@ if [[ "${1:-}" == "--all" ]]; then
     exec python -m pytest -x -q
 fi
 if [[ "${1:-}" == "--smoke" ]]; then
-    exec python -m benchmarks.run service_api,fig10_ycsb,fig12_latency \
-        --tiny --pipeline serial,pipelined --replicas 1,2 --strict
+    python -m benchmarks.run \
+        service_api,fig10_ycsb,fig12_latency,fig17_log_block \
+        --tiny --pipeline serial,pipelined --replicas 1,2 \
+        --layout packed,legacy --strict
+    # live deployment-shape smokes on the packed layout: assert the
+    # one-image-DMA-per-dirty-node invariant survives the full stack
+    python - <<'EOF'
+import json
+from repro.launch.store_dryrun import live_replicated_smoke, live_sharded_smoke
+sh = live_sharded_smoke(shards=2, n_items=256, batch=32)
+assert sh["layout"] == "packed" and sh["image_dma_count"] > 0, sh
+rp = live_replicated_smoke(shards=2, replicas=2, n_items=256, batch=32)
+assert rp["layout"] == "packed" and rp["primary_image_dmas"] > 0, rp
+print(json.dumps({"live_sharded": sh, "live_replicated": rp},
+                 indent=1, default=str))
+EOF
+    exit 0
 fi
 exec python -m pytest -x -q -m "not slow"

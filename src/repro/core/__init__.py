@@ -12,9 +12,12 @@ from .store import HoneycombStore, SyncStats
 from .replica import FollowerReplica, ReplicaGroup
 from .router import (ShardedHoneycombStore, aggregate_stats,
                      uniform_int_boundaries)
-from .read_path import (TreeSnapshot, SnapshotDelta, ScanResult, GetResult,
+from .read_path import (TreeSnapshot, SnapshotDelta, LegacyTreeSnapshot,
+                        LegacySnapshotDelta, ScanResult, GetResult,
                         apply_snapshot_delta, batched_get, batched_scan,
-                        descend, log_sort_positions)
+                        descend, log_sort_positions, snapshot_fields)
+from .schema import (FIELD_NAMES, NARROWED_FIELDS, NODE_SCHEMA, FieldSpec,
+                     NodeImageLayout)
 from .scheduler import OutOfOrderScheduler, Request
 from .cache import InteriorCache
 
@@ -28,8 +31,11 @@ __all__ = [
     "Get", "Scan", "Put", "Update", "Delete", "Response", "Ticket",
     "Routing", "HoneycombService", "decode_wire", "decode_wire_stream",
     "wire_entry_nbytes", "WIRE_ENTRY_OVERHEAD",
-    "TreeSnapshot", "SnapshotDelta", "ScanResult", "GetResult",
+    "TreeSnapshot", "SnapshotDelta", "LegacyTreeSnapshot",
+    "LegacySnapshotDelta", "ScanResult", "GetResult",
     "apply_snapshot_delta", "batched_get", "batched_scan",
-    "descend", "log_sort_positions", "OutOfOrderScheduler", "Request",
+    "descend", "log_sort_positions", "snapshot_fields",
+    "FieldSpec", "NODE_SCHEMA", "FIELD_NAMES", "NARROWED_FIELDS",
+    "NodeImageLayout", "OutOfOrderScheduler", "Request",
     "InteriorCache", "SyncStats",
 ]

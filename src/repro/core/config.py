@@ -22,6 +22,10 @@ from __future__ import annotations
 import dataclasses
 
 
+# device-resident snapshot layouts (HoneycombConfig.layout)
+LAYOUTS = ("packed", "legacy")
+
+
 def bucket_pow2(n: int) -> int:
     """Round a batch/delta length up to a power of two (1 for n <= 1).
 
@@ -74,6 +78,12 @@ class HoneycombConfig:
     # dirty-row fraction above which a delta sync would move more bytes than
     # a wholesale republish is worth; fall back to a full publish
     delta_full_threshold: float = 0.5
+    # device-resident snapshot representation (core/schema.py):
+    # "packed": ONE contiguous u32 node image per slot — a dirty node syncs
+    #           as a single image-row DMA (the paper's 8 KB node transfer);
+    # "legacy": per-field arrays — one row scatter per field, kept as the
+    #           packed layout's op-for-op parity reference.
+    layout: str = "packed"
 
     def __post_init__(self):
         assert self.node_cap % self.n_shortcuts == 0, (
@@ -85,6 +95,8 @@ class HoneycombConfig:
         assert 0.0 < self.delta_full_threshold <= 1.0, (
             "delta_full_threshold is a dirty fraction in (0, 1]")
         assert self.sync_every_k >= 1, "sync_every_k must be >= 1"
+        assert self.layout in LAYOUTS, (
+            f"unknown snapshot layout {self.layout!r} (one of {LAYOUTS})")
 
     @property
     def segment_items(self) -> int:

@@ -19,6 +19,7 @@ from __future__ import annotations
 import numpy as np
 
 from .config import HoneycombConfig
+from .schema import FIELD_NAMES, NODE_SCHEMA
 
 INTERIOR, LEAF = 0, 1
 NULL = -1
@@ -58,42 +59,22 @@ class NodeHeap:
                 new[:old] = getattr(self, name)
             setattr(self, name, new)
 
-        grow("ntype", (), np.int32)
-        grow("nitems", (), np.int32)
-        grow("version", (), np.int64)
-        grow("oldptr", (), np.int32, NULL)       # previous-version phys slot
-        grow("left_child", (), np.int32, NULL)   # interior: leftmost child LID
-        grow("lsib", (), np.int32, NULL)         # leaf: sibling LIDs
-        grow("rsib", (), np.int32, NULL)
+        # every device-visible per-node field comes from the one layout
+        # schema (core/schema.py) — same names, order, host dtypes and NULL
+        # fills the packed node image is defined over.  svals lane 0 holds
+        # the child LID on interior nodes; svallen doubles as overflow tag.
+        for spec in NODE_SCHEMA:
+            grow(spec.name, spec.shape(c), np.dtype(spec.host), spec.fill)
+        # host-only lock/seqno word (Section 3.4): never crosses the bus,
+        # so it lives outside the schema
         grow("lockword", (), np.int64)
-        grow("skeys", (c.node_cap, c.key_words), np.uint32)
-        grow("skeylen", (c.node_cap,), np.int32)
-        # leaves: value lanes; interior: child LID in lane 0
-        grow("svals", (c.node_cap, c.val_words), np.uint32)
-        grow("svallen", (c.node_cap,), np.int32)  # byte length / overflow tag
-        grow("n_shortcuts", (), np.int32)
-        grow("sc_keys", (c.n_shortcuts, c.key_words), np.uint32)
-        grow("sc_keylen", (c.n_shortcuts,), np.int32)
-        grow("sc_pos", (c.n_shortcuts,), np.int32)
-        grow("nlog", (), np.int32)
-        grow("log_keys", (c.log_cap, c.key_words), np.uint32)
-        grow("log_keylen", (c.log_cap,), np.int32)
-        grow("log_vals", (c.log_cap, c.val_words), np.uint32)
-        grow("log_vallen", (c.log_cap,), np.int32)
-        grow("log_op", (c.log_cap,), np.int8)
-        grow("log_backptr", (c.log_cap,), np.int32)
-        grow("log_hint", (c.log_cap,), np.uint8)
-        grow("log_vdelta", (c.log_cap,), np.int64)
 
         self._free.extend(range(capacity - 1, old - 1, -1))
         self.capacity = capacity
         self.generation += 1
 
-    ARRAY_FIELDS = (
-        "ntype nitems version oldptr left_child lsib rsib skeys skeylen "
-        "svals svallen n_shortcuts sc_keys sc_keylen sc_pos nlog log_keys "
-        "log_keylen log_vals log_vallen log_op log_backptr log_hint "
-        "log_vdelta").split()
+    # device-visible per-node fields, in schema/layout order
+    ARRAY_FIELDS = FIELD_NAMES
 
     # -- alloc / free ----------------------------------------------------------
     def alloc(self) -> int:

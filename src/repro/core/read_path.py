@@ -22,6 +22,17 @@ Faithfulness map:
 All shapes are static; versions are int32 on device (the paper uses 64-bit
 with 5-byte log deltas; 32-bit covers any single snapshot's window and the
 host keeps the authoritative 64-bit counters).
+
+Snapshot layouts: the default device-resident representation is the PACKED
+node image (core/schema.py) — one contiguous ``[S, image_words]`` u32 array
+holding every per-node field at a static word offset, the reproduction's
+analogue of the paper's contiguous 8 KB node buffer.  The pre-packing
+per-field representation survives as ``LegacyTreeSnapshot`` /
+``LegacySnapshotDelta`` (selected by ``cfg.layout="legacy"``) and is the
+parity reference the equivalence tests hold the packed layout to.  All
+search/scan code below is layout-agnostic: it reads fields through
+``snapshot_fields()``, which decodes packed images via the layout's static
+offsets and passes legacy snapshots through untouched.
 """
 from __future__ import annotations
 
@@ -33,10 +44,22 @@ import jax.numpy as jnp
 from .config import HoneycombConfig
 from .heap import LEAF, LOG_DELETE, NULL
 from .keys import jax_key_cmp
+from .schema import FIELD_NAMES, NodeImageLayout
 
 
 class TreeSnapshot(NamedTuple):
-    """Immutable device image of the store (exported by HoneycombStore)."""
+    """Immutable device image of the store: ONE packed node-image array
+    (every per-node field at its static layout offset — core/schema.py)
+    plus the page table and the two sync scalars."""
+    image: jax.Array        # u32 [S, image_words] packed node images
+    pagetable: jax.Array    # i32 [LIDS]
+    root_lid: jax.Array     # i32 []
+    read_version: jax.Array  # i32 []
+
+
+class LegacyTreeSnapshot(NamedTuple):
+    """Per-field device image (the pre-packing layout, cfg.layout="legacy"):
+    kept as the packed layout's op-for-op parity reference."""
     ntype: jax.Array        # i32 [S]
     nitems: jax.Array       # i32 [S]
     version: jax.Array      # i32 [S]
@@ -66,24 +89,63 @@ class TreeSnapshot(NamedTuple):
     read_version: jax.Array  # i32 []
 
 
-# per-node-row snapshot fields, in TreeSnapshot order (everything except the
-# page table and the two scalars, which delta-sync separately)
-NODE_FIELDS = (
-    "ntype", "nitems", "version", "oldptr", "left_child", "lsib", "rsib",
-    "skeys", "skeylen", "svals", "svallen", "n_shortcuts", "sc_keys",
-    "sc_keylen", "sc_pos", "nlog", "log_keys", "log_keylen", "log_vals",
-    "log_vallen", "log_op", "log_backptr", "log_hint", "log_vdelta")
+# per-node-row snapshot fields, in layout order — derived from the ONE
+# schema (core/schema.py), not re-enumerated
+NODE_FIELDS = FIELD_NAMES
+
+
+class SnapshotFields:
+    """Layout-agnostic per-field view of a snapshot.
+
+    For a packed ``TreeSnapshot`` each attribute is a static column slice
+    of the image decoded to the field's device dtype (bitcast for signed
+    fields, so NULL = -1 survives the u32 transit); XLA folds the slices
+    into the downstream gathers, so the search engines read exactly the
+    bytes they always did.  Legacy snapshots already expose the attributes
+    and pass through ``snapshot_fields`` untouched.
+    """
+    __slots__ = FIELD_NAMES + ("pagetable", "root_lid", "read_version")
+
+    def __init__(self, **fields):
+        for k, v in fields.items():
+            object.__setattr__(self, k, v)
+
+
+def snapshot_fields(snap, cfg: HoneycombConfig):
+    """Adapt any snapshot (packed, legacy, or an existing view) to
+    per-field attribute access."""
+    if isinstance(snap, TreeSnapshot):
+        layout = NodeImageLayout.for_config(cfg)
+        return SnapshotFields(pagetable=snap.pagetable,
+                              root_lid=snap.root_lid,
+                              read_version=snap.read_version,
+                              **layout.field_views(snap.image))
+    return snap
 
 
 class SnapshotDelta(NamedTuple):
-    """One host->device sync's worth of changed state (paper Sections 3-4:
-    node-buffer DMAs + batched page-table commands + read-version update).
+    """One host->device sync's worth of changed state for the packed
+    layout (paper Sections 3-4: node-buffer DMAs + batched page-table
+    commands + read-version update).
 
-    ``rows`` are the dirty physical slots; each per-node field carries the
-    new row contents ([D, ...] leading dim).  Rows may repeat (padding to a
-    bucketed size keeps the jit cache small); repeated rows carry identical
-    data, so the scatter is idempotent.
+    ``rows`` are the dirty physical slots; ``image`` carries each dirty
+    node's ENTIRE packed image row — one contiguous DMA per dirty node,
+    the paper's whole-node transfer unit.  Rows may repeat (padding to a
+    bucketed size keeps the jit cache small); repeated rows carry
+    identical data, so the scatter is idempotent.
     """
+    rows: jax.Array          # i32 [D] dirty physical slots
+    image: jax.Array         # u32 [D, image_words] replacement node images
+    pt_lids: jax.Array       # i32 [P] page-table command targets
+    pt_phys: jax.Array       # i32 [P] new mappings (may repeat, identical)
+    root_lid: jax.Array      # i32 []
+    read_version: jax.Array  # i32 []
+
+
+class LegacySnapshotDelta(NamedTuple):
+    """Per-field delta (cfg.layout="legacy"): one [D, ...] update block per
+    node field — ~24 row scatters per sync, the traffic shape the packed
+    layout collapses to one."""
     rows: jax.Array          # i32 [D] dirty physical slots
     ntype: jax.Array         # i32 [D]
     nitems: jax.Array        # i32 [D]
@@ -115,19 +177,34 @@ class SnapshotDelta(NamedTuple):
     read_version: jax.Array  # i32 []
 
 
-def apply_snapshot_delta(snap: TreeSnapshot, delta: SnapshotDelta,
-                         *, backend: str | None = None) -> TreeSnapshot:
+def apply_snapshot_delta(snap, delta, *, backend: str | None = None):
     """Scatter one sync's dirty rows + page-table commands into a resident
     device snapshot, yielding the next snapshot.
 
     Functional on purpose: the input snapshot's buffers are never donated,
     so old snapshots held by in-flight batches keep answering at their read
-    version (wait-free MVCC).  ``backend=None`` is the jnp oracle XLA:CPU
-    lowers (the parity reference); ``"pallas"``/``"interpret"`` route every
-    per-node field through ONE fused multi-field Pallas scatter call — the
-    paper's whole-node 8 KB DMA, one kernel invocation per sync instead of
-    one per field (``repro.kernels.delta_scatter.snapshot_multi_scatter``).
+    version (wait-free MVCC).  Dispatches on the delta's layout:
+
+      * packed ``SnapshotDelta`` — ONE image-row scatter patches every
+        field of a dirty node in a single contiguous DMA
+        (``repro.kernels.delta_scatter.snapshot_image_scatter`` on
+        ``"pallas"``/``"interpret"``; ``backend=None`` is the jnp oracle
+        XLA:CPU lowers, kept as the parity reference);
+      * ``LegacySnapshotDelta`` — the per-field path: ``backend=None``
+        scatters field by field, the kernel backends fuse all fields into
+        one multi-field Pallas call (``snapshot_multi_scatter``).
     """
+    if isinstance(delta, SnapshotDelta):
+        if backend is None:
+            image = snap.image.at[delta.rows].set(delta.image)
+        else:
+            from repro.kernels import ops  # deferred: kernels.ref imports us
+            image = ops.snapshot_image_scatter(snap.image, delta.rows,
+                                               delta.image, backend=backend)
+        return snap._replace(
+            image=image,
+            pagetable=snap.pagetable.at[delta.pt_lids].set(delta.pt_phys),
+            root_lid=delta.root_lid, read_version=delta.read_version)
     if backend is None:
         upd = {f: getattr(snap, f).at[delta.rows].set(getattr(delta, f))
                for f in NODE_FIELDS}
@@ -166,7 +243,7 @@ class GetResult(NamedTuple):
 # interior-node search engine (KSU)
 # --------------------------------------------------------------------------
 
-def _resolve_version(snap: TreeSnapshot, phys: jax.Array, rv: jax.Array,
+def _resolve_version(snap: SnapshotFields, phys: jax.Array, rv: jax.Array,
                      cfg: HoneycombConfig) -> jax.Array:
     """Follow old-version pointers until node version <= rv (Section 3.2).
     Bounded walk; wait-free (no locks, no retries)."""
@@ -176,7 +253,7 @@ def _resolve_version(snap: TreeSnapshot, phys: jax.Array, rv: jax.Array,
     return jax.lax.fori_loop(0, cfg.max_version_chain, step, phys)
 
 
-def _shortcut_floor(snap: TreeSnapshot, phys: jax.Array, key: jax.Array,
+def _shortcut_floor(snap: SnapshotFields, phys: jax.Array, key: jax.Array,
                     klen: jax.Array) -> jax.Array:
     """Largest shortcut index whose key <= query (0 if none: the query then
     falls below the first segment and the segment search yields -1)."""
@@ -191,7 +268,7 @@ def _shortcut_floor(snap: TreeSnapshot, phys: jax.Array, key: jax.Array,
     return jnp.maximum(idx, 0)
 
 
-def _segment_floor(snap: TreeSnapshot, phys: jax.Array, seg: jax.Array,
+def _segment_floor(snap: SnapshotFields, phys: jax.Array, seg: jax.Array,
                    key: jax.Array, klen: jax.Array,
                    cfg: HoneycombConfig) -> jax.Array:
     """Floor item index within the selected segment; -1 when the query is
@@ -210,10 +287,12 @@ def _segment_floor(snap: TreeSnapshot, phys: jax.Array, seg: jax.Array,
     return jnp.where(local >= 0, base + local, -1)
 
 
-def descend(snap: TreeSnapshot, key: jax.Array, klen: jax.Array,
+def descend(snap, key: jax.Array, klen: jax.Array,
             cfg: HoneycombConfig) -> jax.Array:
     """Traverse interior nodes root->leaf for a batch.  Returns the resolved
-    physical slot of the leaf each request lands in."""
+    physical slot of the leaf each request lands in.  Accepts any snapshot
+    layout (fields resolved via the static layout offsets when packed)."""
+    snap = snapshot_fields(snap, cfg)
     B = key.shape[0]
     rv = snap.read_version
     lid = jnp.broadcast_to(snap.root_lid, (B,))
@@ -265,7 +344,7 @@ def log_sort_positions(hints: jax.Array, nlog: jax.Array,
     return jax.lax.fori_loop(0, L, insert, pos0)
 
 
-def _resolve_leaf(snap: TreeSnapshot, phys: jax.Array,
+def _resolve_leaf(snap: SnapshotFields, phys: jax.Array,
                   cfg: HoneycombConfig):
     """Merged, shadow-resolved enumeration of one leaf per request.
 
@@ -339,11 +418,13 @@ def _resolve_leaf(snap: TreeSnapshot, phys: jax.Array,
     return keys, klens, vals, vlens, live
 
 
-def batched_scan(snap: TreeSnapshot, lo: jax.Array, lolen: jax.Array,
+def batched_scan(snap, lo: jax.Array, lolen: jax.Array,
                  hi: jax.Array, hilen: jax.Array,
                  cfg: HoneycombConfig) -> ScanResult:
     """SCAN(K_l, K_u) for a batch: floor-start semantics, forward across
-    sibling leaves with bounded budget (Section 3.3)."""
+    sibling leaves with bounded budget (Section 3.3).  Layout-agnostic:
+    packed snapshots are read through static image offsets."""
+    snap = snapshot_fields(snap, cfg)
     c = cfg
     B = lo.shape[0]
     M = c.max_scan_items
@@ -436,7 +517,7 @@ def batched_scan(snap: TreeSnapshot, lo: jax.Array, lolen: jax.Array,
     return ScanResult(count, out_keys, out_klens, out_vals, out_vlens, trunc)
 
 
-def batched_get(snap: TreeSnapshot, key: jax.Array, klen: jax.Array,
+def batched_get(snap, key: jax.Array, klen: jax.Array,
                 cfg: HoneycombConfig) -> GetResult:
     """GET(K) implemented as SCAN(K, K) + post-processing (Section 3.3)."""
     res = batched_scan(snap, key, klen, key, klen, cfg)

@@ -70,15 +70,25 @@ import jax.numpy as jnp
 
 from .api import Routing
 from .config import ReplicationConfig
-from .read_path import TreeSnapshot
+from .read_path import NODE_FIELDS, TreeSnapshot
 from .shard import (StagedSync, StoreShard, SyncStats, _DELTA_BACKEND,
                     _jit_apply_delta)
 
 _now = time.perf_counter
 
 
-def _snapshot_nbytes(snap: TreeSnapshot) -> int:
+def _snapshot_nbytes(snap) -> int:
     return sum(x.nbytes for x in jax.tree.leaves(snap))
+
+
+def _image_feed_cost(snap) -> tuple[int, int]:
+    """(DMA invocations, node-image bytes) of device-copying a whole
+    snapshot into a follower: the packed layout moves ONE contiguous image
+    (core/schema.py); legacy moves one array per field — same bytes."""
+    if isinstance(snap, TreeSnapshot):
+        return 1, snap.image.nbytes
+    return len(NODE_FIELDS), sum(getattr(snap, f).nbytes
+                                 for f in NODE_FIELDS)
 
 
 class FollowerReplica:
@@ -110,11 +120,15 @@ class FollowerReplica:
         stats.snapshots += 1
         if payload.kind == "delta" and self.in_sync and base is not None:
             # independent device scatter per replica: O(dirty_rows) traffic
+            # (one image-row DMA per dirty node on the packed layout — the
+            # delta type carries the layout, so the replay is layout-free)
             self._standby = _jit_apply_delta(base, payload.delta,
                                              backend=_DELTA_BACKEND)
             stats.delta_syncs += 1
             stats.delta_rows += payload.delta_rows
             stats.bytes_synced += payload.nbytes
+            stats.image_dma_count += payload.image_dmas
+            stats.image_bytes += payload.image_bytes
         else:
             # full feed: first publish, primary full republish, or catch-up
             # after a missed payload (a delta would land on the wrong base)
@@ -122,6 +136,9 @@ class FollowerReplica:
             stats.full_syncs += 1
             stats.bytes_synced += (payload.nbytes if payload.kind == "full"
                                    else _snapshot_nbytes(payload.snapshot))
+            dmas, ibytes = _image_feed_cost(payload.snapshot)
+            stats.image_dma_count += dmas
+            stats.image_bytes += ibytes
             self.in_sync = True
         self._standby_rv = payload.read_version
 
@@ -232,6 +249,9 @@ class ReplicaGroup:
         f.sync_stats.snapshots += 1
         f.sync_stats.full_syncs += 1
         f.sync_stats.bytes_synced += _snapshot_nbytes(snap)
+        dmas, ibytes = _image_feed_cost(snap)
+        f.sync_stats.image_dma_count += dmas
+        f.sync_stats.image_bytes += ibytes
 
     # ------------------------------------------------- replica dispatch
     def replica_for_dispatch(self) -> int:

@@ -55,9 +55,11 @@ from .cache import InteriorCache
 from .config import HoneycombConfig, bucket_pow2
 from .keys import pack_keys
 from .pipeline import PipelineStats
-from .read_path import (NODE_FIELDS, GetResult, ScanResult, SnapshotDelta,
+from .read_path import (NODE_FIELDS, GetResult, LegacySnapshotDelta,
+                        LegacyTreeSnapshot, ScanResult, SnapshotDelta,
                         TreeSnapshot, apply_snapshot_delta, batched_get,
                         batched_scan)
+from .schema import NARROWED_FIELDS, NodeImageLayout
 
 # jit the accelerator entry points once per (config, snapshot-shape): the
 # eager op-by-op dispatch otherwise accumulates thousands of tiny LLVM JIT
@@ -72,7 +74,8 @@ _DELTA_BACKEND = "pallas" if jax.default_backend() == "tpu" else None
 _jit_apply_delta = jax.jit(apply_snapshot_delta, static_argnames="backend")
 
 # snapshot fields narrowed to int32 on device (host keeps 64-bit authority)
-_I32_FIELDS = frozenset({"version", "log_op", "log_hint", "log_vdelta"})
+# — derived from the one layout schema, not hand-kept
+_I32_FIELDS = NARROWED_FIELDS
 
 _now = time.perf_counter
 
@@ -91,6 +94,12 @@ class SyncStats:
     log_wire_bytes: int = 0       # append-only wire-format estimate
     #   (key+value+WIRE_ENTRY_OVERHEAD per write) — the paper's log-block
     #   byte accounting, alongside the dirty-row accounting above
+    image_dma_count: int = 0      # node-image DMA invocations: the packed
+    #   layout issues exactly ONE per dirty node (one per whole image on a
+    #   full publish); legacy issues one per field per node — the counter
+    #   the layout refactor exists to collapse
+    image_bytes: int = 0          # node-image payload bytes (both layouts
+    #   carry image_words * 4 per node; the DMA *count* is what differs)
 
     def merge(self, other: "SyncStats"):
         """Accumulate another shard's counters (router aggregation)."""
@@ -109,19 +118,25 @@ class StagedSync:
     follower replica replays (core/replica.py).
 
     ``kind`` is "full" or "delta"; ``delta`` carries the dirty-row +
-    page-table scatter for delta stagings (None for full publishes);
+    page-table scatter for delta stagings (None for full publishes) — a
+    packed ``SnapshotDelta`` (one image row per dirty node) or a
+    ``LegacySnapshotDelta`` (per-field blocks), matching ``cfg.layout``;
     ``snapshot`` is the staged standby itself, which doubles as the catch-up
     source for followers that fell out of sync; ``nbytes`` is the traffic
     this staging metered and ``delta_rows`` the unpadded dirty-row count, so
     per-replica feeding costs O(replicas x dirty_rows) can be accounted
-    exactly; ``read_version`` is what the standby answers at once flipped.
+    exactly; ``image_dmas``/``image_bytes`` are the staging's node-image
+    DMA invocations and payload bytes (what each follower replay re-issues);
+    ``read_version`` is what the standby answers at once flipped.
     """
     kind: str
-    snapshot: TreeSnapshot
-    delta: SnapshotDelta | None
+    snapshot: TreeSnapshot | LegacyTreeSnapshot
+    delta: SnapshotDelta | LegacySnapshotDelta | None
     nbytes: int
     delta_rows: int
     read_version: int
+    image_dmas: int = 0
+    image_bytes: int = 0
 
 
 class StoreShard:
@@ -266,6 +281,7 @@ class StoreShard:
                      and self._pt_gen == t.pt.generation
                      and frac <= self.cfg.delta_full_threshold)
         bytes0 = stats.bytes_synced
+        dmas0, ibytes0 = stats.image_dma_count, stats.image_bytes
         if can_delta:
             snap = self._publish_delta(base,
                                        np.fromiter(sorted(dirty), np.int32,
@@ -308,7 +324,9 @@ class StoreShard:
             kind=staged_kind, snapshot=snap,
             delta=self._staged_delta if staged_kind == "delta" else None,
             nbytes=stats.bytes_synced - bytes0, delta_rows=staged_rows,
-            read_version=self._standby_rv)
+            read_version=self._standby_rv,
+            image_dmas=stats.image_dma_count - dmas0,
+            image_bytes=stats.image_bytes - ibytes0)
         self._staged_delta = None
         if self.on_staged is not None:
             self.on_staged(self.last_staged)
@@ -348,11 +366,16 @@ class StoreShard:
         self.begin_export(force=force, full=full)
         return self.flip()   # no-op returning the active snapshot if clean
 
-    def _publish_full(self) -> TreeSnapshot:
-        """Wholesale republish: every heap array crosses the bus."""
+    def _publish_full(self):
+        """Wholesale republish: the whole store crosses the bus — ONE
+        contiguous [S, image_words] image DMA on the packed layout, one
+        array per field on legacy (same bytes, ~24x the DMA invocations)."""
         t = self.tree
         h = t.heap
         pt_image = t.pt.flush_to_device()
+        stats = self.sync_stats
+        layout = NodeImageLayout.for_config(self.cfg)
+        stats.image_bytes += h.capacity * layout.node_image_bytes
 
         def dev(a, dtype=None):
             # ALWAYS copy: jnp.asarray is typically zero-copy on the CPU
@@ -361,38 +384,46 @@ class StoreShard:
             # immutable device image the paper's DMA produces
             arr = np.asarray(a)
             arr = arr.astype(dtype) if dtype is not None else arr.copy()
-            self.sync_stats.bytes_synced += arr.nbytes
+            stats.bytes_synced += arr.nbytes
             return jnp.asarray(arr)
 
-        return TreeSnapshot(
-            ntype=dev(h.ntype), nitems=dev(h.nitems),
-            version=dev(h.version, np.int32), oldptr=dev(h.oldptr),
-            left_child=dev(h.left_child), lsib=dev(h.lsib), rsib=dev(h.rsib),
-            skeys=dev(h.skeys), skeylen=dev(h.skeylen),
-            svals=dev(h.svals), svallen=dev(h.svallen),
-            n_shortcuts=dev(h.n_shortcuts), sc_keys=dev(h.sc_keys),
-            sc_keylen=dev(h.sc_keylen), sc_pos=dev(h.sc_pos),
-            nlog=dev(h.nlog), log_keys=dev(h.log_keys),
-            log_keylen=dev(h.log_keylen), log_vals=dev(h.log_vals),
-            log_vallen=dev(h.log_vallen), log_op=dev(h.log_op, np.int32),
-            log_backptr=dev(h.log_backptr),
-            log_hint=dev(h.log_hint, np.int32),
-            log_vdelta=dev(h.log_vdelta, np.int32),
+        if self.cfg.layout == "packed":
+            # pack() marshals every field into contiguous node images — the
+            # whole publish is one image transfer (plus the page table)
+            img = layout.pack(h)
+            stats.bytes_synced += img.nbytes
+            stats.image_dma_count += 1
+            return TreeSnapshot(
+                image=jnp.asarray(img),
+                pagetable=dev(pt_image),
+                root_lid=jnp.int32(t.root_lid),
+                read_version=jnp.int32(t.versions.read_version()))
+        stats.image_dma_count += len(NODE_FIELDS)
+        fields = {f: dev(getattr(h, f),
+                         np.int32 if f in _I32_FIELDS else None)
+                  for f in NODE_FIELDS}
+        return LegacyTreeSnapshot(
             pagetable=dev(pt_image),
             root_lid=jnp.int32(t.root_lid),
             read_version=jnp.int32(t.versions.read_version()),
-        )
+            **fields)
 
-    def _publish_delta(self, base: TreeSnapshot,
-                       rows: np.ndarray) -> TreeSnapshot:
+    def _publish_delta(self, base, rows: np.ndarray):
         """Incremental sync: scatter dirty node rows and pending page-table
         commands over ``base`` (the standby-in-progress, or the active
         snapshot when none is staged).  Transfers (and meters) O(dirty)
         bytes instead of O(store); the host-side gathers below copy out of
         the heap eagerly, so later host mutations/GC wipes can never reach
-        a staged standby."""
+        a staged standby.
+
+        Packed layout: each dirty node is marshalled into ONE contiguous
+        image row and issued as a single DMA (``image_dma_count`` grows by
+        exactly len(rows) — the acceptance invariant); legacy ships the
+        same bytes as one row block per field (~24 DMAs per node)."""
         t = self.tree
         h = t.heap
+        stats = self.sync_stats
+        layout = NodeImageLayout.for_config(self.cfg)
         pt_lids, pt_phys = t.pt.take_pending()
         # pad to bucketed sizes with idempotent repeats (duplicate indices
         # carry identical data); when empty, row/lid 0 rewrites itself with
@@ -400,22 +431,35 @@ class StoreShard:
         rows_p = self._pad_index(rows, bucket_pow2(len(rows)))
         lids_p = self._pad_index(pt_lids, bucket_pow2(len(pt_lids)))
         phys_p = t.pt.device_image[lids_p]
-        nbytes = pt_lids.nbytes + pt_phys.nbytes
-        fields = {}
-        for f in NODE_FIELDS:
-            arr = getattr(h, f)[rows_p]
-            if f in _I32_FIELDS:
-                arr = arr.astype(np.int32)
-            if len(rows_p):
-                nbytes += arr.nbytes // len(rows_p) * len(rows)
-            fields[f] = jnp.asarray(arr)
-        self.sync_stats.bytes_synced += nbytes
-        delta = SnapshotDelta(
-            rows=jnp.asarray(rows_p),
-            pt_lids=jnp.asarray(lids_p), pt_phys=jnp.asarray(phys_p),
-            root_lid=jnp.int32(t.root_lid),
-            read_version=jnp.int32(t.versions.read_version()),
-            **fields)
+        # both layouts move image_words * 4 bytes per UNPADDED dirty node
+        # (every device field is one u32 word per element); the accounting
+        # is identical by construction — only the DMA count differs
+        node_bytes = len(rows) * layout.node_image_bytes
+        nbytes = pt_lids.nbytes + pt_phys.nbytes + node_bytes
+        stats.image_bytes += node_bytes
+        if self.cfg.layout == "packed":
+            stats.image_dma_count += len(rows)       # ONE DMA per dirty node
+            delta = SnapshotDelta(
+                rows=jnp.asarray(rows_p),
+                image=jnp.asarray(layout.pack(h, rows_p)),
+                pt_lids=jnp.asarray(lids_p), pt_phys=jnp.asarray(phys_p),
+                root_lid=jnp.int32(t.root_lid),
+                read_version=jnp.int32(t.versions.read_version()))
+        else:
+            stats.image_dma_count += len(rows) * len(NODE_FIELDS)
+            fields = {}
+            for f in NODE_FIELDS:
+                arr = getattr(h, f)[rows_p]
+                if f in _I32_FIELDS:
+                    arr = arr.astype(np.int32)
+                fields[f] = jnp.asarray(arr)
+            delta = LegacySnapshotDelta(
+                rows=jnp.asarray(rows_p),
+                pt_lids=jnp.asarray(lids_p), pt_phys=jnp.asarray(phys_p),
+                root_lid=jnp.int32(t.root_lid),
+                read_version=jnp.int32(t.versions.read_version()),
+                **fields)
+        stats.bytes_synced += nbytes
         self._staged_delta = delta   # replayable by follower replicas
         return _jit_apply_delta(base, delta, backend=_DELTA_BACKEND)
 

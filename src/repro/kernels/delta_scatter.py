@@ -12,16 +12,25 @@ the output BlockSpec can address row ``rows[i]`` before the body runs.  The
 destination is aliased to the output (``input_output_aliases``), so
 untouched rows keep their contents without any copy.
 
-Two kernels:
+Three kernels, tracking the sync path's evolution toward the paper's
+one-contiguous-DMA-per-node transfer:
   * ``snapshot_delta_scatter`` — one flattened field per call (the original
     correctness stub; scalar fields flatten to W=1 blocks, far below the
     128-lane tile).
   * ``snapshot_multi_scatter`` — ALL fields of a dirty row in ONE
     ``pallas_call``: each field is its own aliased operand/output pair and
-    the grid body DMAs every field's row in the same iteration.  This is
-    the paper's node-buffer transfer unit (the whole ~8 KB node crosses in
-    one DMA) and the kernel the store's delta sync dispatches on TPU — one
-    invocation per sync, not one per field.
+    the grid body DMAs every field's row in the same iteration.  One kernel
+    launch per sync, but still ~24 distinct row DMAs per dirty node (one
+    per field operand).  This is what ``cfg.layout="legacy"`` dispatches.
+  * ``snapshot_image_scatter`` — the packed-layout endgame
+    (``cfg.layout="packed"``, the default): the snapshot is ONE
+    ``[S, image_words]`` u32 image (core/schema.py), a dirty node's entire
+    contents are one contiguous ``[image_words]`` row, and the scatter is
+    a single row DMA per dirty node — bit-for-bit the paper's whole-node
+    8 KB buffer transfer, with no per-field addressing anywhere on the
+    device side.  The grid iterates over dirty rows with the row indices
+    scalar-prefetched, so the output BlockSpec lands each update at
+    ``rows[i]`` in the aliased resident image.
 
 Shared caveat: duplicate rows must carry identical data (the store pads
 deltas with repeats), which keeps the scatters order-free.
@@ -66,6 +75,22 @@ def snapshot_delta_scatter(dst, rows, upd, *, interpret: bool = False):
         input_output_aliases={2: 0},   # dst (arg 2, after rows & upd) -> out
         interpret=interpret,
     )(rows, upd, dst)
+
+
+def snapshot_image_scatter(image, rows, upd, *, interpret: bool = False):
+    """image[rows[i], :] = upd[i, :] — ONE contiguous image-row DMA per
+    dirty node (the packed layout's whole sync).
+
+    image: [S, image_words] resident packed node images (u32)
+    rows:  [D] int32 dirty physical slots (repeats carry identical data)
+    upd:   [D, image_words] replacement node images
+
+    The node image IS the transfer unit: every field of the node rides in
+    this one row (static offsets, core/schema.py), so the sync needs no
+    per-field operands — same aliased row-scatter machinery as
+    ``snapshot_delta_scatter``, applied to whole node images.
+    """
+    return snapshot_delta_scatter(image, rows, upd, interpret=interpret)
 
 
 def _multi_scatter_kernel(nf: int):

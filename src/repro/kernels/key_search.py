@@ -59,6 +59,74 @@ def _key_search_kernel(q_ref, qlen_ref, keys_ref, klens_ref, valid_ref,
     out_ref[...] = idx.astype(jnp.int32)
 
 
+def _key_search_image_kernel(q_ref, qlen_ref, img_ref, out_ref, *,
+                             keys_off: int, lens_off: int, count_off: int,
+                             n_keys: int, key_words: int):
+    """Floor search straight off PACKED node images: the candidate block
+    (keys, lengths, live count) is sliced out of each request's
+    [image_words] u32 row at STATIC layout offsets (core/schema.py) — the
+    kernel walks the image, no host-side per-field gather feeds it."""
+    q = q_ref[...]                 # [B_blk, KW] uint32
+    qlen = qlen_ref[...]           # [B_blk]
+    img = img_ref[...]             # [B_blk, IW] uint32 packed node images
+    B = img.shape[0]
+    keys = img[:, keys_off:keys_off + n_keys * key_words] \
+        .reshape(B, n_keys, key_words)
+    klens = img[:, lens_off:lens_off + n_keys].astype(jnp.int32)
+    count = img[:, count_off].astype(jnp.int32)
+    valid = jax.lax.broadcasted_iota(jnp.int32, (B, n_keys), 1) \
+        < count[:, None]
+    leq = _cmp_leq(keys, klens, q, qlen) & valid
+    idx = jnp.where(leq, jax.lax.broadcasted_iota(jnp.int32, leq.shape, 1),
+                    -1).max(axis=1)
+    out_ref[...] = idx.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "keys_off", "lens_off", "count_off", "n_keys", "key_words", "block_b",
+    "interpret"))
+def key_search_image(q, qlen, node_img, *, keys_off: int, lens_off: int,
+                     count_off: int, n_keys: int, key_words: int,
+                     block_b: int = DEFAULT_BLOCK_B,
+                     interpret: bool = False):
+    """Floor search over a candidate block addressed INSIDE packed node
+    images (cfg.layout="packed"; e.g. the shortcut block at the layout's
+    sc_keys/sc_keylen/n_shortcuts offsets).
+
+    q:        [B, KW] uint32 packed big-endian query keys
+    qlen:     [B]     int32 byte lengths
+    node_img: [B, IW] uint32 — one packed image row per request (the node
+              each request is searching, gathered by physical slot)
+    keys_off/lens_off/count_off: word offsets of the candidate keys, key
+              lengths and live-candidate count within the image row
+    n_keys/key_words: candidate block geometry (static)
+    returns [B] int32 floor indices, -1 when no candidate <= query.
+    """
+    B, IW = node_img.shape
+    if B % block_b != 0:
+        pad = -B % block_b
+        q = jnp.pad(q, ((0, pad), (0, 0)))
+        qlen = jnp.pad(qlen, (0, pad))
+        node_img = jnp.pad(node_img, ((0, pad), (0, 0)))
+    Bp = q.shape[0]
+    kern = functools.partial(
+        _key_search_image_kernel, keys_off=keys_off, lens_off=lens_off,
+        count_off=count_off, n_keys=n_keys, key_words=key_words)
+    out = pl.pallas_call(
+        kern,
+        grid=(Bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, q.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b, IW), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Bp,), jnp.int32),
+        interpret=interpret,
+    )(q, qlen, node_img)
+    return out[:B]
+
+
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
 def key_search(q, qlen, keys, klens, valid, *, block_b: int = DEFAULT_BLOCK_B,
                interpret: bool = False):

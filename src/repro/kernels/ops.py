@@ -33,6 +33,23 @@ def key_search(q, qlen, keys, klens, valid, backend: str | None = None,
                           interpret=(backend == "interpret"), **kw)
 
 
+def key_search_image(q, qlen, node_img, *, keys_off, lens_off, count_off,
+                     n_keys, key_words, backend: str | None = None, **kw):
+    """Floor search addressed INSIDE packed node images (cfg.layout=
+    "packed"): the candidate block is sliced from each request's image row
+    at static layout offsets (core/schema.py) instead of arriving as
+    separate key/length/valid operands."""
+    backend = backend or default_backend()
+    if backend == "ref":
+        return _ref.key_search_image_ref(
+            q, qlen, node_img, keys_off=keys_off, lens_off=lens_off,
+            count_off=count_off, n_keys=n_keys, key_words=key_words)
+    return _ks.key_search_image(
+        q, qlen, node_img, keys_off=keys_off, lens_off=lens_off,
+        count_off=count_off, n_keys=n_keys, key_words=key_words,
+        interpret=(backend == "interpret"), **kw)
+
+
 def leaf_merge(nitems, nlog, backptr, hints, *, node_cap, log_cap,
                backend: str | None = None, **kw):
     backend = backend or default_backend()
@@ -53,6 +70,21 @@ def snapshot_delta_scatter(dst, rows, upd, backend: str | None = None, **kw):
     if backend == "ref":
         return _ref.snapshot_delta_scatter_ref(dst, rows, upd)
     return _ds.snapshot_delta_scatter(dst, rows, upd,
+                                      interpret=(backend == "interpret"),
+                                      **kw)
+
+
+def snapshot_image_scatter(image, rows, upd, backend: str | None = None,
+                           **kw):
+    """Apply one delta sync to the PACKED snapshot image: one contiguous
+    [image_words] row DMA per dirty node (the paper's whole-node transfer,
+    cfg.layout="packed").  ``image``/``upd`` are [S, IW]/[D, IW] u32; see
+    ``repro.core.read_path.apply_snapshot_delta`` for the store wiring and
+    the jnp oracle kept as the parity reference."""
+    backend = backend or default_backend()
+    if backend == "ref":
+        return _ref.snapshot_image_scatter_ref(image, rows, upd)
+    return _ds.snapshot_image_scatter(image, rows, upd,
                                       interpret=(backend == "interpret"),
                                       **kw)
 

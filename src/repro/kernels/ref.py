@@ -18,6 +18,20 @@ def key_search_ref(q, qlen, keys, klens, valid):
         .astype(jnp.int32)
 
 
+def key_search_image_ref(q, qlen, img, *, keys_off: int, lens_off: int,
+                         count_off: int, n_keys: int, key_words: int):
+    """Floor search over packed node images: decode the candidate block
+    from each request's image row at the static layout offsets, then the
+    plain floor-search oracle."""
+    B = img.shape[0]
+    keys = img[:, keys_off:keys_off + n_keys * key_words] \
+        .reshape(B, n_keys, key_words)
+    klens = img[:, lens_off:lens_off + n_keys].astype(jnp.int32)
+    count = img[:, count_off].astype(jnp.int32)
+    valid = (jnp.arange(n_keys)[None, :] < count[:, None]).astype(jnp.int32)
+    return key_search_ref(q, qlen, keys, klens, valid)
+
+
 def leaf_merge_ref(nitems, nlog, backptr, hints, *, node_cap: int,
                    log_cap: int):
     """Merged-emission permutation oracle (rank sort via argsort)."""
@@ -44,6 +58,12 @@ def snapshot_delta_scatter_ref(dst, rows, upd):
     Duplicate rows must carry identical data (the store pads deltas with
     repeats), so application order is immaterial."""
     return dst.at[rows].set(upd)
+
+
+def snapshot_image_scatter_ref(image, rows, upd):
+    """Packed node-image row scatter oracle: image[rows[i]] = upd[i] — one
+    whole node image per dirty row (same idempotent-duplicates contract)."""
+    return image.at[rows].set(upd)
 
 
 def snapshot_multi_scatter_ref(dsts, rows, upd):

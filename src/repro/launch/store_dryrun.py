@@ -48,9 +48,10 @@ from repro.core import (Get, HoneycombConfig, HoneycombService, Put,
                         ReplicationConfig, ShardedHoneycombStore, Update,
                         uniform_int_boundaries)
 from repro.core.keys import int_key
-from repro.core.read_path import (NODE_FIELDS, SnapshotDelta, TreeSnapshot,
+from repro.core.read_path import (SnapshotDelta, TreeSnapshot,
                                   apply_snapshot_delta, batched_get,
                                   batched_scan)
+from repro.core.schema import NodeImageLayout
 from repro.launch import hlo_analysis as hla
 from repro.launch.mesh import make_production_mesh
 
@@ -58,35 +59,18 @@ from repro.launch.mesh import make_production_mesh
 def abstract_snapshot(cfg: HoneycombConfig, n_items: int, shards: int):
     """ShapeDtypeStructs for one shard's tree (paper store: 128M items,
     55% leaf occupancy, 8KB-equivalent nodes).  Shard sizing matches the
-    live router's uniform range partition (n_items // shards items each)."""
+    live router's uniform range partition (n_items // shards items each);
+    the snapshot is the PACKED node image (core/schema.py — one
+    [S, image_words] u32 array, every field at a static word offset)."""
     items_per_shard = n_items // shards
     leaves = math.ceil(items_per_shard / (cfg.node_cap * 0.55))
     interior = math.ceil(leaves / (cfg.node_cap * 0.55)) + 8
     S = leaves + interior + 64          # physical slots incl. old versions
-    c = cfg
+    layout = NodeImageLayout.for_config(cfg)
     sds = jax.ShapeDtypeStruct
-    i32, u32 = jnp.int32, jnp.uint32
+    i32 = jnp.int32
     return TreeSnapshot(
-        ntype=sds((S,), i32), nitems=sds((S,), i32),
-        version=sds((S,), i32), oldptr=sds((S,), i32),
-        left_child=sds((S,), i32), lsib=sds((S,), i32), rsib=sds((S,), i32),
-        skeys=sds((S, c.node_cap, c.key_words), u32),
-        skeylen=sds((S, c.node_cap), i32),
-        svals=sds((S, c.node_cap, c.val_words), u32),
-        svallen=sds((S, c.node_cap), i32),
-        n_shortcuts=sds((S,), i32),
-        sc_keys=sds((S, c.n_shortcuts, c.key_words), u32),
-        sc_keylen=sds((S, c.n_shortcuts), i32),
-        sc_pos=sds((S, c.n_shortcuts), i32),
-        nlog=sds((S,), i32),
-        log_keys=sds((S, c.log_cap, c.key_words), u32),
-        log_keylen=sds((S, c.log_cap), i32),
-        log_vals=sds((S, c.log_cap, c.val_words), u32),
-        log_vallen=sds((S, c.log_cap), i32),
-        log_op=sds((S, c.log_cap), i32),
-        log_backptr=sds((S, c.log_cap), i32),
-        log_hint=sds((S, c.log_cap), i32),
-        log_vdelta=sds((S, c.log_cap), i32),
+        image=sds((S, layout.image_words), jnp.uint32),
         pagetable=sds((S,), i32),
         root_lid=sds((), i32),
         read_version=sds((), i32),
@@ -95,16 +79,16 @@ def abstract_snapshot(cfg: HoneycombConfig, n_items: int, shards: int):
 
 def abstract_delta(cfg: HoneycombConfig, snap: TreeSnapshot, dirty_rows: int,
                    pt_commands: int) -> SnapshotDelta:
-    """ShapeDtypeStructs for one shard's delta sync (D dirty node rows + P
-    batched page-table commands + the two scalars)."""
+    """ShapeDtypeStructs for one shard's delta sync: D whole node-image
+    rows (ONE contiguous DMA per dirty node) + P batched page-table
+    commands + the two scalars."""
     sds = jax.ShapeDtypeStruct
     i32 = jnp.int32
-    fields = {f: sds((dirty_rows, *getattr(snap, f).shape[1:]),
-                     getattr(snap, f).dtype) for f in NODE_FIELDS}
     return SnapshotDelta(
         rows=sds((dirty_rows,), i32),
+        image=sds((dirty_rows, snap.image.shape[1]), jnp.uint32),
         pt_lids=sds((pt_commands,), i32), pt_phys=sds((pt_commands,), i32),
-        root_lid=sds((), i32), read_version=sds((), i32), **fields)
+        root_lid=sds((), i32), read_version=sds((), i32))
 
 
 def delta_sync_analysis(cfg: HoneycombConfig, snap_abs: TreeSnapshot,
@@ -208,8 +192,10 @@ def live_sharded_smoke(shards: int = 4, n_items: int = 1024,
     agg = st.sync_stats
     ps = st.pipeline_stats
     return {
-        "shards": shards, "items": n_items,
+        "shards": shards, "items": n_items, "layout": cfg.layout,
         "cross_shard_scan_items": len(span),
+        "image_dma_count": agg.image_dma_count,
+        "image_bytes": agg.image_bytes,
         "per_shard_bytes_synced": [s.bytes_synced
                                    for s in st.per_shard_sync_stats],
         "per_shard_delta_syncs": [s.delta_syncs
@@ -234,8 +220,9 @@ def live_replicated_smoke(shards: int = 2, replicas: int = 2,
     scheduler's (shard, replica, kind, cost) buckets.  Reports per-replica
     served lanes, the delta-feed amplification bytes and the epoch-lag
     freshness meters the mesh-scale model treats as free."""
+    cfg = HoneycombConfig()
     st = ShardedHoneycombStore(
-        HoneycombConfig(), heap_capacity=1024, shards=shards,
+        cfg, heap_capacity=1024, shards=shards,
         boundaries=uniform_int_boundaries(n_items, shards),
         replication=ReplicationConfig(replicas=replicas,
                                       policy="round_robin"))
@@ -253,6 +240,8 @@ def live_replicated_smoke(shards: int = 2, replicas: int = 2,
     reads = [t.result() for t in tickets if not t.op.IS_WRITE]
     return {
         "shards": shards, "replicas": replicas, "items": n_items,
+        "layout": cfg.layout,
+        "primary_image_dmas": st.sync_stats.image_dma_count,
         "served_replica_lanes": sorted({r.replica for r in reads}),
         "serving_versions": sorted({r.serving_version for r in reads}),
         "per_shard_replica_ops": st.per_shard_replica_ops,

@@ -80,13 +80,15 @@ def test_paged_attention_bf16():
 
 def test_kernels_match_store_search():
     """The KSU kernel agrees with the live store's segment search."""
-    from repro.core import HoneycombConfig, HoneycombStore
+    from repro.core import (HoneycombConfig, HoneycombStore,
+                            snapshot_fields)
     from repro.core.keys import int_key, pack_keys
     cfg = HoneycombConfig(node_cap=16, log_cap=4, n_shortcuts=4)
     store = HoneycombStore(cfg, heap_capacity=64)
     for i in range(16):
         store.put(int_key(i * 2), b"v")
-    snap = store.export_snapshot()
+    # decode per-field views out of the packed node image (core/schema.py)
+    snap = snapshot_fields(store.export_snapshot(), cfg)
     phys = int(snap.pagetable[int(snap.root_lid)])
     B = 8
     queries = [int_key(2 * i + 1) for i in range(B)]   # between keys

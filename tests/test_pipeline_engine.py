@@ -236,9 +236,9 @@ def test_pipeline_stage_meters():
 
 # ------------------------------------------------------ fused delta scatter
 def test_fused_multi_field_scatter_matches_oracle():
-    """apply_snapshot_delta(backend="interpret") — ONE fused Pallas
-    multi-field scatter invocation — is bit-identical to the jnp oracle on
-    a materialized snapshot/delta pair."""
+    """apply_snapshot_delta(backend="interpret") on the packed image layout
+    — ONE contiguous image-row scatter per dirty node — is bit-identical to
+    the jnp oracle on a materialized snapshot/delta pair."""
     from repro.launch.store_dryrun import abstract_delta, abstract_snapshot
     cfg = SMALL
     snap_abs, S = abstract_snapshot(cfg, n_items=64, shards=1)
