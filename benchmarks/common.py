@@ -16,7 +16,7 @@ import time
 import numpy as np
 
 from repro.baselines.cpu_store import CpuOrderedStore
-from repro.core import (Get, HoneycombConfig, HoneycombService,
+from repro.core import (FeedTopology, Get, HoneycombConfig, HoneycombService,
                         HoneycombStore, Put, ReplicationConfig, Scan,
                         ShardedHoneycombStore, uniform_int_boundaries)
 from repro.core.keys import int_key
@@ -51,15 +51,21 @@ def build_stores(n_items: int = 8192, val_bytes: int = 16,
                  honeycomb: bool = True, baseline: bool = True,
                  shards: int = 1, replicas: int = 1,
                  replica_policy: str = "round_robin",
+                 feed: str = "log", relay_fanout: int = 2,
+                 relay_depth: int = 0,
                  force_router: bool = False):
     """Load both stores with the same random-order keys (paper: inserts are
     uniform random).  ``shards > 1`` builds the live range-sharded store
     (uniform split of the int-key space) instead of the single-device
     facade — the sweep axis for the scale-out benchmarks; ``replicas > 1``
     adds follower replicas per shard with ``replica_policy`` read
-    spreading (the replication sweep axis).  ``force_router`` builds the
-    routed facade even at shards=1/replicas=1, so sweeps that include the
-    baseline point compare like against like."""
+    spreading (the replication sweep axis).  ``feed`` selects the follower
+    feed ("log" ships the epoch's encoded op stream and replays it on
+    device; "delta" ships dirty image rows), and ``relay_fanout``/
+    ``relay_depth`` shape the relay tree the payload fans out through
+    (depth 0 = primary feeds every follower directly).  ``force_router``
+    builds the routed facade even at shards=1/replicas=1, so sweeps that
+    include the baseline point compare like against like."""
     rng = np.random.default_rng(seed)
     order = rng.permutation(n_items)
     val = bytes(val_bytes)
@@ -69,8 +75,10 @@ def build_stores(n_items: int = 8192, val_bytes: int = 16,
         hc = ShardedHoneycombStore(
             cfg or HoneycombConfig(), shards=shards,
             boundaries=uniform_int_boundaries(n_items, shards),
-            replication=ReplicationConfig(replicas=replicas,
-                                          policy=replica_policy))
+            replication=ReplicationConfig(
+                replicas=replicas, policy=replica_policy, feed=feed,
+                topology=FeedTopology(fanout=relay_fanout,
+                                      depth=relay_depth)))
     else:
         hc = HoneycombStore(cfg or HoneycombConfig())
     cp = CpuOrderedStore() if baseline else None
@@ -98,16 +106,26 @@ def sync_traffic(store) -> dict:
             # contiguous image-row DMA per dirty node; legacy: one per field)
             "image_dma_count": s.image_dma_count,
             "image_bytes": s.image_bytes,
-            # replica-amplification traffic (follower delta feed; 0 for the
-            # unreplicated store, which has no replication machinery)
+            # replica-amplification traffic (follower feed; 0 for the
+            # unreplicated store, which has no replication machinery).
+            # feed_bytes splits into primary_egress_bytes (edges out of the
+            # primary) + relay_hop_bytes (relay->follower edges);
+            # log_fallback_epochs counts delta-shipped epochs under the log
+            # feed (tree-shape changes the wire stream can't replay)
             "replication_bytes": getattr(store, "replication_bytes", 0),
+            "feed_bytes": getattr(store, "feed_bytes", 0),
+            "primary_egress_bytes": getattr(store, "primary_egress_bytes", 0),
+            "relay_hop_bytes": getattr(store, "relay_hop_bytes", 0),
+            "log_fallback_epochs": getattr(store, "log_fallback_epochs", 0),
             "delta_fraction": s.delta_fraction}
 
 
 _SYNC_DIFF_KEYS = ("bytes_synced", "snapshots", "full_syncs", "delta_syncs",
                    "pagetable_commands", "read_version_updates",
                    "log_entries", "log_wire_bytes", "image_dma_count",
-                   "image_bytes", "replication_bytes")
+                   "image_bytes", "replication_bytes", "feed_bytes",
+                   "primary_egress_bytes", "relay_hop_bytes",
+                   "log_fallback_epochs")
 
 
 def run_mixed(store, sampler, *, n_ops: int, read_frac: float,

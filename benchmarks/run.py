@@ -12,6 +12,9 @@ sweeps the scheduler's epoch-pipeline modes for the sections that drive it
 time.  ``--replicas 1,2,4`` sweeps per-shard replica counts for the
 replicated read-spreading sections (YCSB), reporting the
 read-throughput-vs-replicas and sync-bytes-amplification curves.
+``--feed log,delta`` sweeps the follower feed (log-shipped wire-stream
+replay vs dirty-image-row delta) and ``--relay-depth 0,2`` the relay-tree
+depth the feed payload fans out through, for the replicated sections.
 ``--layout packed,legacy`` sweeps the device-resident snapshot layout for
 the sections that meter node-image DMA traffic (log-block), comparing the
 packed one-DMA-per-dirty-node format against the legacy per-field scatters
@@ -75,15 +78,19 @@ def print_sync_summary(results: dict) -> None:
                              sync["log_wire_bytes"],
                              sync.get("bytes_synced", 0),
                              sync.get("image_dma_count", 0),
-                             sync.get("replication_bytes", 0)))
+                             sync.get("feed_bytes",
+                                      sync.get("replication_bytes", 0)),
+                             sync.get("relay_hop_bytes", 0),
+                             sync.get("log_fallback_epochs", 0)))
     if not rows:
         return
     print("# --- sync traffic summary ---")
     print(f"# {'run':<44} {'log_ents':>8} {'wire_B':>10} "
-          f"{'sync_B':>12} {'img_dmas':>8} {'repl_B':>12}")
-    for name, ents, wire, synced, dmas, repl in rows:
+          f"{'sync_B':>12} {'img_dmas':>8} {'feed_B':>12} "
+          f"{'relay_B':>12} {'fallbacks':>9}")
+    for name, ents, wire, synced, dmas, feed, relay, fb in rows:
         print(f"# {name:<44} {ents:>8} {wire:>10} {synced:>12} "
-              f"{dmas:>8} {repl:>12}")
+              f"{dmas:>8} {feed:>12} {relay:>12} {fb:>9}")
 
 
 def main() -> None:
@@ -101,6 +108,14 @@ def main() -> None:
                     help="comma-separated per-shard replica counts for the "
                          "read-spreading sections (e.g. 1,2,4); empty "
                          "skips the axis")
+    ap.add_argument("--feed", default="",
+                    help="comma-separated follower feeds to sweep for the "
+                         "replicated sections (e.g. log,delta); empty "
+                         "uses the default log feed")
+    ap.add_argument("--relay-depth", default="",
+                    help="comma-separated relay-tree depths to sweep for "
+                         "the replicated sections (e.g. 0,2); empty uses "
+                         "the flat primary-feeds-all topology")
     ap.add_argument("--layout", default="packed",
                     help="comma-separated snapshot layouts to sweep for the "
                          "layout-aware sections (e.g. packed,legacy)")
@@ -113,6 +128,8 @@ def main() -> None:
     shards = tuple(int(s) for s in args.shards.split(","))
     pipeline = tuple(m for m in args.pipeline.split(",") if m)
     replicas = tuple(int(r) for r in args.replicas.split(",") if r)
+    feed = tuple(f for f in args.feed.split(",") if f)
+    relay_depth = tuple(int(d) for d in args.relay_depth.split(",") if d != "")
     layout = tuple(m for m in args.layout.split(",") if m)
     only = tuple(t for t in (args.only or "").split(",") if t)
     results = {}
@@ -127,6 +144,10 @@ def main() -> None:
             kwargs["pipeline"] = pipeline
         if "replicas" in params:
             kwargs["replicas"] = replicas
+        if "feed" in params and feed:
+            kwargs["feed"] = feed
+        if "relay_depth" in params and relay_depth:
+            kwargs["relay_depth"] = relay_depth
         if "layout" in params and layout:
             kwargs["layout"] = layout
         if args.tiny:

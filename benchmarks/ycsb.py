@@ -21,10 +21,23 @@ Replicas are a third axis (``--replicas 1,2,4``): the read-heavy workloads
 (B, C — uniform and the zipfian skew where read spreading wins, per F2)
 drive the replicated store (core/replica.py) with round-robin read
 spreading, reporting the read-throughput-vs-replicas curve plus the
-sync-bytes-amplification curve (follower delta-feed bytes per op on top of
-the primary's sync traffic).
+sync-bytes-amplification curve (follower feed bytes per op on top of the
+primary's sync traffic).
+
+Feed is a fourth axis (``--feed log,delta`` x ``--relay-depth 0,2``): the
+write-heavy workload A drives the replicated store under both follower
+feeds, reporting the per-follower feed-bytes-per-epoch amplification
+curve — the log-shipping artifact: the log feed ships the epoch's encoded
+op wire stream (~tens of bytes per write) where the delta feed ships
+whole dirty image rows (~5 KB each), so per-follower feed bytes collapse
+by >=10x; epochs whose tree shape changed fall back to the image delta
+and are excluded from the ratio but reported alongside it.  Relay depth
+reshapes WHO pays: the total feed bytes are topology-invariant while the
+primary's own egress drops to its O(fanout) direct edges.
 """
 from __future__ import annotations
+
+import dataclasses
 
 from repro.core.keys import int_key
 
@@ -44,8 +57,59 @@ WORKLOADS = {
 def run(n_items: int = 4096, n_ops: int = 2048,
         shards: tuple[int, ...] = (1,),
         pipeline: tuple[str, ...] = (),
-        replicas: tuple[int, ...] = ()) -> dict:
+        replicas: tuple[int, ...] = (),
+        feed: tuple[str, ...] = (),
+        relay_depth: tuple[int, ...] = ()) -> dict:
     results = {}
+    # feed axis: write-heavy A over log vs delta follower feeds and relay
+    # depths — per-follower feed bytes per epoch is the amplification
+    # artifact (acceptance: pure log feed <= 10% of the delta feed's,
+    # fallback epochs excluded from the ratio and reported)
+    per_follower = {}
+    for nr in replicas if (feed or relay_depth) else ():
+        if nr < 2:
+            continue
+        for fd in feed or ("log",):
+            for depth in relay_depth or (0,):
+                hf, _ = build_stores(n_items, shards=1, replicas=nr,
+                                     replica_policy="round_robin", feed=fd,
+                                     relay_depth=depth, baseline=False,
+                                     force_router=True)
+                fs0 = dataclasses.asdict(hf.shards[0].feed_stats)
+                r = run_mixed(hf, uniform_sampler(n_items, seed=3),
+                              n_ops=n_ops, n_items=n_items, batch=64,
+                              **WORKLOADS["A"])
+                d = {k: v - fs0[k] for k, v in
+                     dataclasses.asdict(hf.shards[0].feed_stats).items()}
+                nf = nr - 1
+                if fd == "log":       # pure log deliveries only
+                    per_fe = d["log_bytes"] / max(d["log_feed_epochs"] * nf,
+                                                  1)
+                else:                 # delta deliveries minus catch-ups
+                    per_fe = ((d["feed_bytes"] - d["catchup_bytes"])
+                              / max(d["delta_feed_epochs"] * nf, 1))
+                per_follower[(nr, depth, fd)] = per_fe
+                key = f"A/feed/{fd}/replicas{nr}/depth{depth}"
+                results[key] = {
+                    "honeycomb_ops_s": r["ops_per_s"], "replicas": nr,
+                    "feed": fd, "relay_depth": depth,
+                    "per_follower_feed_B_per_epoch": per_fe,
+                    "feed_delta": d, "sync": r["sync"]}
+                emit(f"ycsb_A_feed_{fd}_r{nr}_d{depth}",
+                     1e6 / r["ops_per_s"],
+                     f"perF_B/epoch={per_fe:.0f} "
+                     f"feed_B={d['feed_bytes']} "
+                     f"egress_B={d['primary_egress_bytes']} "
+                     f"relay_B={d['relay_hop_bytes']} "
+                     f"fallbacks={d['log_fallback_epochs']}")
+    for (nr, depth, fd), log_b in sorted(per_follower.items()):
+        if fd != "log" or (nr, depth, "delta") not in per_follower:
+            continue
+        ratio = log_b / max(per_follower[(nr, depth, "delta")], 1e-9)
+        results[f"A/feed_ratio/replicas{nr}/depth{depth}"] = {
+            "log_over_delta": ratio, "replicas": nr, "relay_depth": depth}
+        emit(f"ycsb_A_feed_ratio_r{nr}_d{depth}", 0.0,
+             f"log/delta={ratio:.4f} (target<=0.10, fallbacks excluded)")
     # replication axis: read-heavy workloads over growing replica sets —
     # read throughput should scale with serving lanes while writes (and
     # their delta feed) stay on the primary; the amplification meter is
@@ -138,4 +202,5 @@ def run(n_items: int = 4096, n_ops: int = 2048,
 
 
 if __name__ == "__main__":
-    run(shards=(1, 4), pipeline=("serial", "pipelined"), replicas=(1, 2, 4))
+    run(shards=(1, 4), pipeline=("serial", "pipelined"), replicas=(1, 2, 4),
+        feed=("log", "delta"), relay_depth=(0, 2))

@@ -8,11 +8,14 @@
 #                              # submit_many + drain over a replicated
 #                              # sharded store, wire-codec roundtrip),
 #                              # serial-vs-pipelined YCSB+latency plus a
-#                              # --replicas 1,2 read-spreading sweep, the
+#                              # --replicas 1,2 read-spreading sweep and a
+#                              # --feed log,delta x --relay-depth 0,2
+#                              # follower-feed amplification sweep, the
 #                              # log-block sweep on BOTH snapshot layouts
 #                              # (packed one-DMA-per-dirty-node vs legacy
 #                              # per-field), and both store_dryrun LIVE
-#                              # smokes (sharded + replicated) on the packed
+#                              # smokes (sharded + replicated with the
+#                              # log-shipped feed engaged) on the packed
 #                              # layout; results land in
 #                              # experiments/bench_results.json
 set -euo pipefail
@@ -27,9 +30,12 @@ if [[ "${1:-}" == "--smoke" ]]; then
     python -m benchmarks.run \
         service_api,fig10_ycsb,fig12_latency,fig17_log_block \
         --tiny --pipeline serial,pipelined --replicas 1,2 \
+        --feed log,delta --relay-depth 0,2 \
         --layout packed,legacy --strict
     # live deployment-shape smokes on the packed layout: assert the
-    # one-image-DMA-per-dirty-node invariant survives the full stack
+    # one-image-DMA-per-dirty-node invariant survives the full stack,
+    # and that the replicated store actually shipped (and replayed) the
+    # log feed rather than silently regressing to image-row deltas
     python - <<'EOF'
 import json
 from repro.launch.store_dryrun import live_replicated_smoke, live_sharded_smoke
@@ -37,6 +43,9 @@ sh = live_sharded_smoke(shards=2, n_items=256, batch=32)
 assert sh["layout"] == "packed" and sh["image_dma_count"] > 0, sh
 rp = live_replicated_smoke(shards=2, replicas=2, n_items=256, batch=32)
 assert rp["layout"] == "packed" and rp["primary_image_dmas"] > 0, rp
+feed = rp["feed"]
+assert feed["log_feed_epochs"] > 0 and feed["log_replays"] > 0, feed
+assert feed["log_bytes"] > 0 and feed["wire_bytes"] > 0, feed
 print(json.dumps({"live_sharded": sh, "live_replicated": rp},
                  indent=1, default=str))
 EOF

@@ -1,15 +1,15 @@
 """Honeycomb core: the paper's contribution as a composable JAX module."""
-from .config import (HoneycombConfig, DEFAULT_CONFIG, REPLICA_POLICIES,
-                     ReplicationConfig, ServiceConfig, ShardingConfig,
-                     bucket_pow2)
+from .config import (HoneycombConfig, DEFAULT_CONFIG, FeedTopology,
+                     REPLICA_FEEDS, REPLICA_POLICIES, ReplicationConfig,
+                     ServiceConfig, ShardingConfig, bucket_pow2)
 from .api import (Delete, Get, HoneycombService, Put, Response, Routing,
-                  Scan, Ticket, Update, WIRE_ENTRY_OVERHEAD, decode_wire,
-                  decode_wire_stream, wire_entry_nbytes)
+                  Scan, Ticket, Update, WIRE_ENTRY_OVERHEAD, WireDecodeError,
+                  decode_wire, decode_wire_stream, wire_entry_nbytes)
 from .btree import HoneycombTree
 from .pipeline import PIPELINE_MODES, PipelineStats
 from .shard import StagedSync, StoreShard
 from .store import HoneycombStore, SyncStats
-from .replica import FollowerReplica, ReplicaGroup
+from .replica import FeedStats, FollowerReplica, ReplicaGroup
 from .router import (ShardedHoneycombStore, aggregate_stats,
                      uniform_int_boundaries)
 from .read_path import (TreeSnapshot, SnapshotDelta, LegacyTreeSnapshot,
@@ -23,14 +23,15 @@ from .cache import InteriorCache
 
 __all__ = [
     "HoneycombConfig", "DEFAULT_CONFIG", "ServiceConfig", "ShardingConfig",
-    "ReplicationConfig", "REPLICA_POLICIES", "HoneycombTree",
+    "ReplicationConfig", "REPLICA_POLICIES", "REPLICA_FEEDS",
+    "FeedTopology", "HoneycombTree",
     "HoneycombStore", "StoreShard", "StagedSync", "ShardedHoneycombStore",
-    "ReplicaGroup", "FollowerReplica", "aggregate_stats",
+    "ReplicaGroup", "FollowerReplica", "FeedStats", "aggregate_stats",
     "uniform_int_boundaries", "bucket_pow2",
     "PIPELINE_MODES", "PipelineStats",
     "Get", "Scan", "Put", "Update", "Delete", "Response", "Ticket",
     "Routing", "HoneycombService", "decode_wire", "decode_wire_stream",
-    "wire_entry_nbytes", "WIRE_ENTRY_OVERHEAD",
+    "wire_entry_nbytes", "WIRE_ENTRY_OVERHEAD", "WireDecodeError",
     "TreeSnapshot", "SnapshotDelta", "LegacyTreeSnapshot",
     "LegacySnapshotDelta", "ScanResult", "GetResult",
     "apply_snapshot_delta", "batched_get", "batched_scan",

@@ -59,6 +59,13 @@ _WIRE_HEADER = struct.Struct(">BHH")
 _WIRE_U16 = struct.Struct(">H")
 
 
+class WireDecodeError(ValueError):
+    """A wire buffer failed to decode: truncated header or payload, or an
+    unknown op code.  Decoding is all-or-nothing — a stream that raises
+    has applied NOTHING, so a replication feed can fall back to a full
+    resync instead of replaying a silently partial epoch."""
+
+
 def wire_entry_nbytes(key: bytes, value: bytes = b"") -> int:
     """Exact wire size of one log entry — THE shared accounting between the
     op encoder below and the store's ``SyncStats.log_wire_bytes`` meter
@@ -204,19 +211,31 @@ WRITE_KINDS = tuple(k for k, c in OPS_BY_KIND.items() if c.IS_WRITE)
 
 def decode_wire(data: bytes, offset: int = 0) -> tuple[Op, int]:
     """Decode one op from ``data`` at ``offset``; returns (op, next_offset)
-    so a log-structured stream of entries decodes by chaining offsets."""
+    so a log-structured stream of entries decodes by chaining offsets.
+    Raises :class:`WireDecodeError` on a truncated or garbage buffer."""
+    if offset + WIRE_ENTRY_OVERHEAD > len(data):
+        raise WireDecodeError(
+            f"truncated wire header at offset {offset}: need "
+            f"{WIRE_ENTRY_OVERHEAD} bytes, {len(data) - offset} remain")
     code, alen, blen = _WIRE_HEADER.unpack_from(data, offset)
     cls = OPS_BY_CODE.get(code)
-    assert cls is not None, f"unknown wire op code {code}"
+    if cls is None:
+        raise WireDecodeError(
+            f"unknown wire op code {code} at offset {offset}")
     p = offset + WIRE_ENTRY_OVERHEAD
-    assert p + alen + blen <= len(data), (
-        f"truncated wire entry at offset {offset}: header promises "
-        f"{alen}+{blen} payload bytes, {len(data) - p} remain")
+    if p + alen + blen > len(data):
+        raise WireDecodeError(
+            f"truncated wire entry at offset {offset}: header promises "
+            f"{alen}+{blen} payload bytes, {len(data) - p} remain")
     a, b = bytes(data[p: p + alen]), bytes(data[p + alen: p + alen + blen])
     p += alen + blen
     if cls is Get:
         return Get(a), p
     if cls is Scan:
+        if p + _WIRE_U16.size > len(data):
+            raise WireDecodeError(
+                f"truncated SCAN entry at offset {offset}: the u16 "
+                f"expected-items tail is missing")
         (expected,) = _WIRE_U16.unpack_from(data, p)
         return Scan(a, b, expected), p + _WIRE_U16.size
     if cls is Delete:

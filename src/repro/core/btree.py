@@ -82,6 +82,7 @@ class HoneycombTree:
         self.gc = GarbageCollector(
             self.epochs, self.heap.free, self.pt.free_lid, self.overflow.free)
         self.stats = TreeStats()
+        self.last_placement = None   # set per write; see _write
 
         # bootstrap: the tree is a single empty leaf
         root_phys = self.heap.alloc()
@@ -324,6 +325,12 @@ class HoneycombTree:
 
     def _write(self, key: bytes, value: bytes, op: int, thread: int = 0):
         klanes, klen = self._pack(key)
+        # placement record of THIS write if (and only if) it takes the log
+        # fast path — (phys, slot, backptr, hint, vdelta), the sidecar the
+        # log-shipped replication feed (core/replica.py) needs to replay
+        # the wire entry on a follower image.  Merge/split/underflow paths
+        # leave it None: those epochs are not replayable.
+        self.last_placement = None
         self.epochs.cpu_begin(thread)
         for _ in range(MAX_RESTARTS):
             path = self._traverse(klanes, klen)
@@ -361,6 +368,8 @@ class HoneycombTree:
         h.log_backptr[phys, j] = self._log_backptr(phys, klanes, klen)
         h.log_hint[phys, j] = hint
         h.log_vdelta[phys, j] = wv - nv
+        self.last_placement = (phys, j, int(h.log_backptr[phys, j]),
+                               hint, wv - nv)
         # publish: the paper packs (size | seqno | lock) into one word so the
         # count bump, seqno bump and unlock are a single store
         h.nlog[phys] = j + 1

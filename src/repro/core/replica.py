@@ -19,25 +19,51 @@ its own ``SyncStats`` and an epoch/read-version watermark.  A follower has
 NO tree of its own — it is fed exclusively by the primary's staged sync
 payloads (``StagedSync``, core/shard.py):
 
-  * a "delta" payload re-applies the primary's dirty-row + page-table
-    scatter onto the follower's own standby — a separate device scatter per
-    replica, so feeding N followers costs O(N x dirty_rows) bytes/work, not
-    O(N x store_size) (metered per replica, tested);
+  * under the LOG feed (``ReplicationConfig.feed="log"``, the default) a
+    replayable delta epoch ships its ``LogPayload`` — the epoch's writes
+    wire-encoded ONCE by the core/api.py codec plus a 24 B/entry placement
+    sidecar — and the follower applies it with the ``log_replay_scatter``
+    Pallas kernel: each entry's ~(key_words + val_words + 6) words scatter
+    into the follower's packed image at static ``NodeImageLayout``
+    offsets.  Per follower the feed costs O(log_wire_bytes), typically
+    tens of bytes per write, instead of re-issuing the primary's
+    5 KB-per-dirty-node image-row DMAs — the same slow-bus argument that
+    drives Honeycomb's own batching, applied to the replication fan-out;
+  * an epoch whose tree shape changed (split/root growth/GC moves/pending
+    page-table commands, or an overflow-length value) has NO wire-replay
+    representation, so it falls back per-epoch to the image-row delta —
+    metered as ``FeedStats.log_fallback_epochs`` so benchmarks report the
+    fallback fraction.  ``feed="delta"`` pins every epoch to the image
+    delta (the pre-log feed, kept as the byte-accounting reference);
   * a "full" payload (first export, heap growth, dirty fraction over the
     delta threshold) device-copies the primary's staged standby;
-  * a follower that missed a payload (paused, attached late) is OUT OF
-    SYNC: deltas no longer apply to its base, so it catches up with a full
-    copy at the next staging (or ``resync_follower``), and until then its
+  * a follower that missed a payload (paused, attached late, or cut off
+    behind a paused relay) is OUT OF SYNC: neither deltas nor log replays
+    apply to its base, so it catches up with a full copy at the next
+    reachable staging (or ``resync_follower``), and until then its
     published read version lags and the router never serves it.
+
+**Relay tree** (``FeedTopology(fanout, depth)``, core/config.py) — with
+``depth >= 1`` the one encoded payload routes primary -> up to ``fanout``
+relays -> their children instead of primary -> everyone: each follower
+receives its bytes from ``topology.parents()``'s parent edge, so the
+feeder's egress (``FeedStats.primary_egress_bytes``) is O(fanout) while
+downstream edges are metered as ``relay_hop_bytes``.  Relays are ordinary
+followers that forward the payload they received; a PAUSED relay cuts off
+its whole subtree (descendants miss the payload, go out of sync, and are
+routed around by the freshness rule until a live path lets them take a
+full catch-up).  ``depth=0`` is the flat O(replicas)-egress feed.
 
 **ReplicaGroup** — one primary ``StoreShard`` plus N-1 followers behind the
 shard facade (attribute access falls through to the primary, so a group is
 drop-in wherever a shard was).  The group wires the primary's ``on_staged``
 / ``on_flip`` hooks, so a replication round is exactly the epoch pipeline's
-sync: ``begin_export`` stages the SAME dirty-row + page-table delta into
-every follower's standby (each scatter an independently enqueued device
-op), and ``flip`` publishes the whole group — whichever path triggered it
-(facade export, scheduler stage_export, or an "every_k" policy auto-sync).
+sync: ``begin_export`` encodes the epoch once and stages the SAME payload
+into every reachable follower's standby (each replay an independently
+enqueued device op), and ``flip`` publishes the whole group — whichever
+path triggered it (facade export, scheduler stage_export, or an "every_k"
+policy auto-sync).  ``FeedStats`` meters the whole transport: feed bytes
+by edge class, epochs by feed kind, and catch-up traffic.
 
 **Freshness rule (no stale reads).**  Writes always go to the primary.  A
 dispatched read batch is pinned to a replica whose published read version
@@ -63,18 +89,59 @@ through the primary's dispatch machinery (``_device_get``/``_device_scan``
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from .api import Routing
-from .config import ReplicationConfig
+from .api import Routing, decode_wire_stream
+from .config import ReplicationConfig, bucket_pow2
+from .heap import LOG_DELETE, LOG_INSERT, LOG_UPDATE
 from .read_path import NODE_FIELDS, TreeSnapshot
-from .shard import (StagedSync, StoreShard, SyncStats, _DELTA_BACKEND,
-                    _jit_apply_delta)
+from .schema import NodeImageLayout
+from .shard import (LogPayload, StagedSync, StoreShard, SyncStats,
+                    _DELTA_BACKEND, _jit_apply_delta)
 
 _now = time.perf_counter
+
+# wire op kind -> heap log op code (the decode half of the feed)
+_LOG_CODES = {"put": LOG_INSERT, "update": LOG_UPDATE, "delete": LOG_DELETE}
+
+_LOG_BACKEND = _DELTA_BACKEND     # TPU -> compiled Pallas, else jnp oracle
+
+
+@functools.partial(jax.jit, static_argnames=("offs", "backend"))
+def _jit_log_replay(image, rows, slots, entries, offs, backend):
+    from repro.kernels import ops as kernel_ops
+    return kernel_ops.log_replay_scatter(image, rows, slots, entries,
+                                         offs=offs, backend=backend)
+
+
+@dataclasses.dataclass
+class FeedStats:
+    """Transport meters of one ReplicaGroup's replication feed (summed
+    across shards by ``router.aggregate_stats``).  Byte counters meter
+    EDGES (one increment per follower delivery); epoch counters meter
+    STAGINGS (one increment per ``begin_export`` that fed followers)."""
+    feed_bytes: int = 0           # total bytes over all feed edges
+    wire_bytes: int = 0           # exact op wire stream bytes shipped
+    log_bytes: int = 0            # edge bytes of log-replay deliveries
+    fallback_bytes: int = 0       # edge bytes of image deltas shipped on
+    #   fallback epochs (log feed only; the fallback-fraction numerator)
+    primary_egress_bytes: int = 0  # bytes on primary->child edges — the
+    #   feeder bandwidth the relay tree bounds at O(fanout)
+    relay_hop_bytes: int = 0      # bytes on relay->child edges
+    log_feed_epochs: int = 0      # stagings shipped as a log payload
+    log_fallback_epochs: int = 0  # log-feed stagings that had to ship the
+    #   image delta (tree shape changed / GC / overflow value)
+    delta_feed_epochs: int = 0    # stagings shipped as deltas by choice
+    #   (feed="delta", or legacy layout with no packed image to replay into)
+    full_feed_epochs: int = 0     # full-publish stagings
+    full_catchups: int = 0        # out-of-sync followers refed a full copy
+    catchup_bytes: int = 0        # bytes those full catch-ups moved
 
 
 def _snapshot_nbytes(snap) -> int:
@@ -111,10 +178,11 @@ class FollowerReplica:
         self._standby_rv: int | None = None
         self.served_ops = 0
 
-    def stage(self, payload: StagedSync) -> None:
+    def stage(self, payload: StagedSync) -> tuple[int, bool]:
         """Replay one primary staging into our standby buffer: re-apply the
         delta scatter on our own base when in sync, otherwise device-copy
-        the primary's staged standby (full catch-up)."""
+        the primary's staged standby (full catch-up).  Returns the bytes
+        this delivery moved over our feed edge and whether it was full."""
         base = self._standby if self._standby is not None else self.snapshot
         stats = self.sync_stats
         stats.snapshots += 1
@@ -129,18 +197,50 @@ class FollowerReplica:
             stats.bytes_synced += payload.nbytes
             stats.image_dma_count += payload.image_dmas
             stats.image_bytes += payload.image_bytes
+            nbytes, was_full = payload.nbytes, False
         else:
             # full feed: first publish, primary full republish, or catch-up
             # after a missed payload (a delta would land on the wrong base)
             self._standby = jax.tree.map(jnp.copy, payload.snapshot)
             stats.full_syncs += 1
-            stats.bytes_synced += (payload.nbytes if payload.kind == "full"
-                                   else _snapshot_nbytes(payload.snapshot))
+            nbytes = (payload.nbytes if payload.kind == "full"
+                      else _snapshot_nbytes(payload.snapshot))
+            stats.bytes_synced += nbytes
             dmas, ibytes = _image_feed_cost(payload.snapshot)
             stats.image_dma_count += dmas
             stats.image_bytes += ibytes
             self.in_sync = True
+            was_full = True
         self._standby_rv = payload.read_version
+        return nbytes, was_full
+
+    def stage_log(self, payload: StagedSync, marshalled) -> int:
+        """Replay one staging from its LOG payload: scatter the epoch's
+        marshalled wire entries into our own standby image with the
+        ``log_replay_scatter`` kernel — O(entry words) device traffic, no
+        image-row DMAs (the feed's whole point; ``image_dma_count`` and
+        ``image_bytes`` do NOT move).  By induction our base image equals
+        the primary's scatter base, so the replayed standby is
+        bit-identical to the primary's staged standby (tested).  Only
+        callable in sync with an existing base; returns edge bytes."""
+        lp = payload.log_payload
+        base = self._standby if self._standby is not None else self.snapshot
+        stats = self.sync_stats
+        stats.snapshots += 1
+        if marshalled is None:           # forced epoch with zero writes:
+            image = base.image           # only the read version advances
+        else:
+            rows, slots, entries, offs = marshalled
+            image = _jit_log_replay(base.image, rows, slots, entries, offs,
+                                    _LOG_BACKEND)
+        self._standby = base._replace(
+            image=image, read_version=jnp.int32(lp.read_version))
+        self._standby_rv = payload.read_version
+        stats.log_replays += 1
+        stats.log_entries += lp.entries
+        stats.log_wire_bytes += lp.wire_nbytes
+        stats.bytes_synced += lp.nbytes
+        return lp.nbytes
 
     def flip(self, primary_epoch: int) -> bool:
         """Publish the staged standby; no-op when nothing is staged (the
@@ -170,6 +270,19 @@ class ReplicaGroup:
                           for i in range(self.replication.replicas - 1)]
         self.lagging_skips = 0         # batches redirected off a stale follower
         self.replication_s = 0.0       # wall time spent feeding followers
+        self.feed_stats = FeedStats()
+        # relay tree: follower id -> feeding parent id (0 = primary); ids
+        # ascend level by level, so walking followers in order always
+        # visits a parent before its children
+        self._parents = self.replication.topology.parents(len(self.followers))
+        # the log feed needs the packed image (the replay kernel's one
+        # destination buffer); the legacy per-field layout keeps the delta
+        # feed.  Capture costs the unreplicated store nothing: the flag
+        # stays False with no followers.
+        self._log_enabled = (self.replication.feed == "log"
+                             and bool(self.followers)
+                             and primary.cfg.layout == "packed")
+        primary.log_capture = self._log_enabled
         self._primary_served = 0       # device requests the primary served
         # read-spreading policy state (the pick lives HERE; the router
         # delegates): round_robin cursor, and least_loaded's pick-time
@@ -201,15 +314,74 @@ class ReplicaGroup:
         return 1 + len(self.followers)
 
     # --------------------------------------------------- replication feed
+    def _marshal_log_payload(self, lp: LogPayload):
+        """Decode the one encoded wire stream and marshal it into the
+        dense device block ``log_replay_scatter`` consumes — ONCE per
+        staging, shared by every follower lane (each lane still runs its
+        own independently enqueued replay).  Entries pad to the shared
+        pow2 bucket schedule with idempotent repeats of the last record."""
+        if lp.entries == 0:
+            return None
+        layout = NodeImageLayout.for_config(self.primary.cfg)
+        ops = decode_wire_stream(lp.wire)
+        blk = layout.pack_log_entries(
+            ops, [_LOG_CODES[op.KIND] for op in ops],
+            lp.backptrs, lp.hints, lp.vdeltas)
+        size = bucket_pow2(lp.entries)
+        rows = StoreShard._pad_index(lp.rows, size)
+        slots = StoreShard._pad_index(lp.slots, size)
+        if size > lp.entries:
+            blk = np.concatenate(
+                [blk, np.repeat(blk[-1:], size - lp.entries, axis=0)])
+        return (jnp.asarray(rows), jnp.asarray(slots), jnp.asarray(blk),
+                layout.log_replay_offsets())
+
     def _on_primary_staged(self, payload: StagedSync) -> None:
-        """Stage the same delta into every follower's standby — one
-        independently enqueued device scatter per replica lane."""
+        """Feed one staging to the group through the relay tree: encode
+        the log payload's device block once, then deliver parent-first —
+        a follower whose parent is paused or itself undelivered misses the
+        payload (out of sync until a reachable staging full-copies it).
+        Every edge's bytes are metered into ``FeedStats`` by edge class."""
         t0 = _now()
+        fs = self.feed_stats
+        lp = payload.log_payload
+        marshalled = None
+        if self.followers:
+            if payload.kind == "full":
+                fs.full_feed_epochs += 1
+            elif lp is not None:
+                fs.log_feed_epochs += 1
+                marshalled = self._marshal_log_payload(lp)
+            elif self._log_enabled:
+                fs.log_fallback_epochs += 1
+            else:
+                fs.delta_feed_epochs += 1
+        delivered = {0}
         for f in self.followers:
-            if f.paused:
+            parent = self._parents.get(f.replica_id, 0)
+            if f.paused or parent not in delivered:
                 f.in_sync = False      # missed payload: next feed is full
                 continue
-            f.stage(payload)
+            can_replay = (lp is not None and f.in_sync
+                          and (f._standby is not None
+                               or f.snapshot is not None))
+            if can_replay:
+                nbytes = f.stage_log(payload, marshalled)
+                fs.wire_bytes += lp.wire_nbytes
+                fs.log_bytes += nbytes
+            else:
+                nbytes, was_full = f.stage(payload)
+                if was_full and payload.kind != "full":
+                    fs.full_catchups += 1
+                    fs.catchup_bytes += nbytes
+                elif self._log_enabled and payload.kind == "delta":
+                    fs.fallback_bytes += nbytes
+            fs.feed_bytes += nbytes
+            if parent == 0:
+                fs.primary_egress_bytes += nbytes
+            else:
+                fs.relay_hop_bytes += nbytes
+            delivered.add(f.replica_id)
         self.replication_s += _now() - t0
 
     def _on_primary_flip(self) -> None:
@@ -248,10 +420,16 @@ class ReplicaGroup:
         f.in_sync = self.primary._standby is None
         f.sync_stats.snapshots += 1
         f.sync_stats.full_syncs += 1
-        f.sync_stats.bytes_synced += _snapshot_nbytes(snap)
+        nbytes = _snapshot_nbytes(snap)
+        f.sync_stats.bytes_synced += nbytes
         dmas, ibytes = _image_feed_cost(snap)
         f.sync_stats.image_dma_count += dmas
         f.sync_stats.image_bytes += ibytes
+        # an admin resync is a primary-direct full catch-up on the feed
+        self.feed_stats.full_catchups += 1
+        self.feed_stats.catchup_bytes += nbytes
+        self.feed_stats.feed_bytes += nbytes
+        self.feed_stats.primary_egress_bytes += nbytes
 
     # ------------------------------------------------- replica dispatch
     def replica_for_dispatch(self) -> int:

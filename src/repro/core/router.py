@@ -356,6 +356,39 @@ class ShardedHoneycombStore:
         return sum(sh.replication_bytes for sh in self.shards)
 
     @property
+    def feed_stats(self):
+        """Aggregate replication-transport meters (``replica.FeedStats``)
+        across every shard's replica group: feed bytes split by edge class
+        (primary egress vs relay hops), epochs split by feed kind (log /
+        fallback / delta / full), and catch-up traffic."""
+        from .replica import FeedStats
+        return aggregate_stats((sh.feed_stats for sh in self.shards),
+                               FeedStats)
+
+    @property
+    def feed_bytes(self) -> int:
+        """Total bytes over all replication feed edges (the per-follower
+        transport the log feed shrinks to O(log_wire_bytes))."""
+        return sum(sh.feed_stats.feed_bytes for sh in self.shards)
+
+    @property
+    def relay_hop_bytes(self) -> int:
+        """Feed bytes carried by relay->child edges (0 on the flat feed)."""
+        return sum(sh.feed_stats.relay_hop_bytes for sh in self.shards)
+
+    @property
+    def primary_egress_bytes(self) -> int:
+        """Feed bytes leaving the primaries themselves — what the relay
+        tree bounds at O(fanout) instead of O(replicas)."""
+        return sum(sh.feed_stats.primary_egress_bytes for sh in self.shards)
+
+    @property
+    def log_fallback_epochs(self) -> int:
+        """Log-feed stagings that shipped the image delta because the
+        epoch was not replayable (tree shape changed / GC / overflow)."""
+        return sum(sh.feed_stats.log_fallback_epochs for sh in self.shards)
+
+    @property
     def replica_lag_epochs(self) -> list[list[int]]:
         """Per shard, each follower's epoch lag behind its primary."""
         return [sh.replica_lag_epochs for sh in self.shards]

@@ -49,7 +49,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .api import WIRE_ENTRY_OVERHEAD, Routing, wire_entry_nbytes
+from .api import (OPS_BY_KIND, WIRE_ENTRY_OVERHEAD, Delete, Routing,
+                  wire_entry_nbytes)
 from .btree import HoneycombTree
 from .cache import InteriorCache
 from .config import HoneycombConfig, bucket_pow2
@@ -100,6 +101,9 @@ class SyncStats:
     #   the layout refactor exists to collapse
     image_bytes: int = 0          # node-image payload bytes (both layouts
     #   carry image_words * 4 per node; the DMA *count* is what differs)
+    log_replays: int = 0          # follower stagings applied by replaying
+    #   the epoch's op wire stream on device (log_replay_scatter) instead
+    #   of re-issuing the primary's image-row DMAs — the log-shipped feed
 
     def merge(self, other: "SyncStats"):
         """Accumulate another shard's counters (router aggregation)."""
@@ -137,6 +141,36 @@ class StagedSync:
     read_version: int
     image_dmas: int = 0
     image_bytes: int = 0
+    # the log-shipped feed unit: present iff the epoch was replayable (all
+    # writes took the leaf fast path — no splits/GC/pt moves/overflow
+    # values) and log capture is on.  None means followers must take the
+    # image delta (the metered per-epoch fallback).
+    log_payload: "LogPayload | None" = None
+
+
+@dataclasses.dataclass
+class LogPayload:
+    """One sync epoch's writes, encoded ONCE for every follower lane.
+
+    ``wire`` is the op stream in the exact core/api.py wire format
+    (``len(wire)`` equals the epoch's ``SyncStats.log_wire_bytes`` growth —
+    encoder and meter share ``wire_entry_nbytes``).  The sidecar vectors
+    carry each write's fast-path placement — physical leaf row, log slot,
+    backptr, order hint, version delta — which the primary derived from
+    its pre-epoch tree state; shipping them (4 B x 5 per entry) spares
+    every follower re-deriving placements from a host tree it does not
+    have, and keeps replay a pure device scatter.  ``nbytes`` is what one
+    follower edge actually moves: wire + sidecar."""
+    wire: bytes
+    rows: np.ndarray          # [E] int32 physical leaf slot per entry
+    slots: np.ndarray         # [E] int32 log slot index per entry
+    backptrs: np.ndarray      # [E] int32 sorted-block back pointers
+    hints: np.ndarray         # [E] int32 log order hints
+    vdeltas: np.ndarray       # [E] int64 version deltas (narrow on device)
+    entries: int
+    read_version: int
+    wire_nbytes: int
+    nbytes: int
 
 
 class StoreShard:
@@ -183,31 +217,61 @@ class StoreShard:
         self.on_staged: Callable[[StagedSync], None] | None = None
         self.on_flip: Callable[[], None] | None = None
         self._staged_delta: SnapshotDelta | None = None
+        # log-shipped feed capture (core/replica.py sets log_capture when
+        # followers ride the "log" feed; the unreplicated store pays one
+        # bool check per write).  The epoch log holds (op, placement) per
+        # write since the last staging; any write that missed the leaf
+        # fast path — or carried an overflow-length value, or a GC pass —
+        # poisons the epoch, and its staging falls back to the image delta.
+        self.log_capture = False
+        self._epoch_log: list = []
+        self._epoch_replayable = True
+        self._staged_pt_cmds = 0
 
     # ------------------------------------------------------------- writes
     def put(self, key: bytes, value: bytes, thread: int = 0):
         self.tree.put(key, value, thread)
-        self._note_write(key, value)
+        self._note_write(key, value, "put")
 
     def update(self, key: bytes, value: bytes, thread: int = 0):
         self.tree.update(key, value, thread)
-        self._note_write(key, value)
+        self._note_write(key, value, "update")
 
     def delete(self, key: bytes, thread: int = 0):
         self.tree.delete(key, thread)
-        self._note_write(key, b"")
+        self._note_write(key, b"", "delete")
 
-    def _note_write(self, key: bytes, value: bytes):
+    def _note_write(self, key: bytes, value: bytes, kind: str = "put"):
         self._snapshot_dirty = True
         self._writes_since_sync += 1
         self.sync_stats.log_entries += 1
         # the op wire encoder's exact size (core/api.py) — the meter and
         # encode_wire() share one accounting and can never drift
         self.sync_stats.log_wire_bytes += wire_entry_nbytes(key, value)
+        if self.log_capture:
+            # capture BEFORE any policy auto-sync below, so the staging
+            # that this very write triggers still carries it
+            self._capture_op(key, value, kind)
         if (self.cfg.sync_policy == "every_k"
                 and self._writes_since_sync >= self.cfg.sync_every_k
                 and not self._sync_deferred):
             self.export_snapshot()
+
+    def _capture_op(self, key: bytes, value: bytes, kind: str):
+        """Append this write to the epoch log for the log-shipped feed.
+        A write that missed the fast path (split/merge/underflow — the
+        tree shape changed) or stored an overflow-length value (the
+        overflow slot id is not derivable from the wire value) poisons
+        the epoch: its staging ships the image delta instead."""
+        placement = self.tree.last_placement
+        if placement is None or len(value) > self.cfg.max_inline_val_bytes:
+            self._epoch_replayable = False
+            self._epoch_log.clear()
+            return
+        if self._epoch_replayable:
+            op = Delete(key) if kind == "delete" \
+                else OPS_BY_KIND[kind](key, value)
+            self._epoch_log.append((op, placement))
 
     @contextlib.contextmanager
     def deferred_sync(self):
@@ -326,11 +390,42 @@ class StoreShard:
             nbytes=stats.bytes_synced - bytes0, delta_rows=staged_rows,
             read_version=self._standby_rv,
             image_dmas=stats.image_dma_count - dmas0,
-            image_bytes=stats.image_bytes - ibytes0)
+            image_bytes=stats.image_bytes - ibytes0,
+            log_payload=self._build_log_payload(staged_kind))
         self._staged_delta = None
+        # epoch boundary for the log-shipped feed: whatever happens next
+        # belongs to the next staging
+        self._epoch_log = []
+        self._epoch_replayable = True
         if self.on_staged is not None:
             self.on_staged(self.last_staged)
         return True
+
+    def _build_log_payload(self, staged_kind: str) -> LogPayload | None:
+        """Encode the epoch's writes ONCE as the wire stream + placement
+        sidecar every follower edge ships (the log-shipped feed unit).
+        None — the per-epoch fallback — when capture is off, the staging
+        was a full publish (bases regress/reshape), the epoch saw a
+        non-fast-path write or GC, or page-table commands rode the delta
+        (tree shape changed: a log replay could not reproduce them)."""
+        if (not self.log_capture or staged_kind != "delta"
+                or not self._epoch_replayable or self._staged_pt_cmds):
+            return None
+        log = self._epoch_log
+        E = len(log)
+        wire = b"".join(op.encode_wire() for op, _ in log)
+        rows = np.fromiter((p[0] for _, p in log), np.int32, E)
+        slots = np.fromiter((p[1] for _, p in log), np.int32, E)
+        backptrs = np.fromiter((p[2] for _, p in log), np.int32, E)
+        hints = np.fromiter((p[3] for _, p in log), np.int32, E)
+        vdeltas = np.fromiter((p[4] for _, p in log), np.int64, E)
+        sidecar = (rows.nbytes + slots.nbytes + backptrs.nbytes
+                   + hints.nbytes + vdeltas.nbytes)
+        return LogPayload(
+            wire=wire, rows=rows, slots=slots, backptrs=backptrs,
+            hints=hints, vdeltas=vdeltas, entries=E,
+            read_version=self._standby_rv, wire_nbytes=len(wire),
+            nbytes=len(wire) + sidecar)
 
     def flip(self) -> TreeSnapshot | None:
         """Publish the staged standby as the active snapshot — the atomic
@@ -425,6 +520,9 @@ class StoreShard:
         stats = self.sync_stats
         layout = NodeImageLayout.for_config(self.cfg)
         pt_lids, pt_phys = t.pt.take_pending()
+        # pending LID moves mean the tree shape changed under this epoch —
+        # a log replay cannot reproduce them, so the feed must fall back
+        self._staged_pt_cmds = len(pt_lids)
         # pad to bucketed sizes with idempotent repeats (duplicate indices
         # carry identical data); when empty, row/lid 0 rewrites itself with
         # its current contents (clean rows match the device image)
@@ -584,7 +682,14 @@ class StoreShard:
 
     # ------------------------------------------------------------- misc
     def collect_garbage(self) -> int:
-        return self.tree.gc.collect()
+        n = self.tree.gc.collect()
+        if n:
+            # GC wipes freed slots (marking them dirty) and queues LID
+            # frees — row mutations no wire entry describes, so the
+            # epoch's staging must ship the image delta
+            self._epoch_replayable = False
+            self._epoch_log.clear()
+        return n
 
     @property
     def stats(self):

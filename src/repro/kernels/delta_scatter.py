@@ -93,6 +93,74 @@ def snapshot_image_scatter(image, rows, upd, *, interpret: bool = False):
     return snapshot_delta_scatter(image, rows, upd, interpret=interpret)
 
 
+def _log_replay_kernel(offs):
+    """Kernel body for one log-replay step: entry ``i`` (a marshalled
+    [1, EW] u32 record, see ``schema.pack_log_entries``) is written into
+    image row ``rows[i]`` at the static layout offsets in ``offs``, each
+    per-slot log field advanced by ``slots[i] * width``.  The image is
+    aliased in ANY memory space and addressed with dynamic stores — only
+    the entry's own words move, never a node row.  ``nlog`` is stored as
+    ``slots[i] + 1``: the grid runs in order and log appends are monotone
+    per row within an epoch, so the last write holds the row's final
+    count (padded duplicate entries repeat the same record)."""
+    kw, vw = offs.key_words, offs.val_words
+
+    def kernel(rows_ref, slots_ref, entry_ref, img_ref, out_ref):
+        del img_ref                      # aliased to out_ref
+        i = pl.program_id(0)
+        r = rows_ref[i]
+        j = slots_ref[i]
+        e = entry_ref[0, :]
+        out_ref[r, pl.ds(offs.log_keys + j * kw, kw)] = e[0:kw]
+        out_ref[r, offs.log_keylen + j] = e[kw]
+        out_ref[r, pl.ds(offs.log_vals + j * vw, vw)] = e[kw + 1:kw + 1 + vw]
+        out_ref[r, offs.log_vallen + j] = e[kw + 1 + vw]
+        out_ref[r, offs.log_op + j] = e[kw + vw + 2]
+        out_ref[r, offs.log_backptr + j] = e[kw + vw + 3]
+        out_ref[r, offs.log_hint + j] = e[kw + vw + 4]
+        out_ref[r, offs.log_vdelta + j] = e[kw + vw + 5]
+        out_ref[r, offs.nlog] = (j + 1).astype(out_ref.dtype)
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("offs", "interpret"))
+def log_replay_scatter(image, rows, slots, entries, *, offs,
+                       interpret: bool = False):
+    """Replay one epoch's marshalled log entries into a resident packed
+    node image, in place (the log-shipped replication feed's device half).
+
+    image:   [S, image_words] resident follower node images (u32)
+    rows:    [D] int32 target physical slots (leaves that took appends)
+    slots:   [D] int32 log slot index per entry (monotone per row;
+             padded entries repeat the last record)
+    entries: [D, log_entry_words] u32 marshalled records
+    offs:    ``schema.LogReplayOffsets`` static layout constants
+
+    Where the image-delta feed DMAs a whole ``image_words`` row per dirty
+    node, this kernel moves only each entry's ~(key_words + val_words + 6)
+    words — the device-side analogue of shipping the op wire stream
+    instead of node buffers over the slow bus.
+    """
+    D = entries.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(D,),
+        in_specs=[
+            pl.BlockSpec((1, entries.shape[1]),
+                         lambda i, rows, slots: (i, 0)),     # entry record
+            pl.BlockSpec(memory_space=pltpu.ANY),            # image (alias)
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+    )
+    return pl.pallas_call(
+        _log_replay_kernel(offs),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(image.shape, image.dtype),
+        input_output_aliases={3: 0},   # image (after rows, slots, entries)
+        interpret=interpret,
+    )(rows, slots, entries, image)
+
+
 def _multi_scatter_kernel(nf: int):
     """Kernel body for ``nf`` fused fields: refs arrive as
     (rows, upd_0..upd_{nf-1}, dst_0..dst_{nf-1}, out_0..out_{nf-1});

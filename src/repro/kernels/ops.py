@@ -89,6 +89,23 @@ def snapshot_image_scatter(image, rows, upd, backend: str | None = None,
                                       **kw)
 
 
+def log_replay_scatter(image, rows, slots, entries, *, offs,
+                       backend: str | None = None, **kw):
+    """Replay marshalled log entries into the resident packed snapshot
+    image (the log-shipped replication feed): entry ``i`` writes its
+    ~(key_words + val_words + 6) words into row ``rows[i]`` at the static
+    layout offsets in ``offs`` (``core/schema.LogReplayOffsets``), instead
+    of a whole ``image_words`` row DMA per dirty node.  ``slots`` are the
+    per-entry log indices (monotone per row within an epoch; padding
+    repeats the last record)."""
+    backend = backend or default_backend()
+    if backend == "ref":
+        return _ref.log_replay_scatter_ref(image, rows, slots, entries,
+                                           offs=offs)
+    return _ds.log_replay_scatter(image, rows, slots, entries, offs=offs,
+                                  interpret=(backend == "interpret"), **kw)
+
+
 def snapshot_multi_scatter(dsts, rows, upd, backend: str | None = None,
                            **kw):
     """Apply one delta sync's dirty rows to EVERY per-node field of the

@@ -73,6 +73,47 @@ def snapshot_multi_scatter_ref(dsts, rows, upd):
     return tuple(d.at[rows].set(u) for d, u in zip(dsts, upd))
 
 
+def log_replay_scatter_ref(image, rows, slots, entries, *, offs):
+    """Log-replay scatter oracle: apply one epoch's marshalled log entries
+    to a packed node image (the log-shipped replication feed).
+
+    Entry ``i`` writes its key/value lanes, lengths, op code, backptr,
+    hint and vdelta words into image row ``rows[i]`` at the static layout
+    offsets in ``offs`` (a ``schema.LogReplayOffsets``), each per-slot
+    field advanced by ``slots[i] * width``; ``nlog`` becomes each touched
+    row's highest ``slots + 1`` (log appends are monotone per row within
+    an epoch — the kernel's last in-order write — and padded duplicate
+    entries repeat the same record, so order is immaterial)."""
+    kw, vw = offs.key_words, offs.val_words
+    S, IW = image.shape
+    rows = rows.astype(jnp.int32)
+    j = slots.astype(jnp.int32)
+    flat = image.reshape(-1)
+    base = rows * IW
+
+    def col(off):                     # flat index of a width-1 slot field
+        return base + off + j
+
+    flat = flat.at[(base[:, None] + offs.log_keys + j[:, None] * kw
+                    + jnp.arange(kw)[None, :]).reshape(-1)] \
+        .set(entries[:, 0:kw].reshape(-1))
+    flat = flat.at[col(offs.log_keylen)].set(entries[:, kw])
+    flat = flat.at[(base[:, None] + offs.log_vals + j[:, None] * vw
+                    + jnp.arange(vw)[None, :]).reshape(-1)] \
+        .set(entries[:, kw + 1:kw + 1 + vw].reshape(-1))
+    flat = flat.at[col(offs.log_vallen)].set(entries[:, kw + 1 + vw])
+    flat = flat.at[col(offs.log_op)].set(entries[:, kw + vw + 2])
+    flat = flat.at[col(offs.log_backptr)].set(entries[:, kw + vw + 3])
+    flat = flat.at[col(offs.log_hint)].set(entries[:, kw + vw + 4])
+    flat = flat.at[col(offs.log_vdelta)].set(entries[:, kw + vw + 5])
+    img = flat.reshape(S, IW)
+    # per-row final count: entries sharing a row all carry that row's max
+    # slots+1, so the duplicate-index set below is order-free
+    same_row = rows[:, None] == rows[None, :]
+    final_nlog = jnp.where(same_row, (j + 1)[None, :], 0).max(axis=1)
+    return img.at[rows, offs.nlog].set(final_nlog.astype(image.dtype))
+
+
 def paged_attention_ref(q, k_pages, v_pages, block_tables, seq_lens,
                         start_pos=None, *, scale: float | None = None,
                         softcap: float = 0.0):

@@ -28,9 +28,11 @@ Two halves keep the abstract model honest:
     cross-shard scan stitching) and reports per-shard sync traffic and
     router load imbalance — the measured twin of the modeled numbers;
     ``live_replicated_smoke()`` adds the replication axis (follower
-    replicas fed by primary deltas, round-robin read spreading, lag and
-    amplification meters, per-response replica/serving-version stamps —
-    core/replica.py, core/api.py).
+    replicas fed by the log-shipped wire stream replayed on device —
+    falling back to image-row deltas when the tree shape changed —
+    round-robin read spreading, lag/amplification/feed meters,
+    per-response replica/serving-version stamps — core/replica.py,
+    core/api.py).
 
 Usage: PYTHONPATH=src python -m repro.launch.store_dryrun
 """
@@ -215,11 +217,14 @@ def live_sharded_smoke(shards: int = 4, n_items: int = 1024,
 def live_replicated_smoke(shards: int = 2, replicas: int = 2,
                           n_items: int = 512, batch: int = 64) -> dict:
     """The replication twin of ``live_sharded_smoke``: each shard serves
-    from a primary plus follower replicas fed by the primary's delta
-    stream (core/replica.py), with round-robin read spreading through the
-    scheduler's (shard, replica, kind, cost) buckets.  Reports per-replica
-    served lanes, the delta-feed amplification bytes and the epoch-lag
-    freshness meters the mesh-scale model treats as free."""
+    from a primary plus follower replicas fed by the primary's log-shipped
+    op wire stream, replayed on device by the log_replay_scatter kernel
+    (core/replica.py; tree-shape-changing epochs fall back to the image
+    delta), with round-robin read spreading through the scheduler's
+    (shard, replica, kind, cost) buckets.  Reports per-replica served
+    lanes, the feed amplification bytes (with the primary-egress /
+    relay-hop split and fallback-epoch count) and the epoch-lag freshness
+    meters the mesh-scale model treats as free."""
     cfg = HoneycombConfig()
     st = ShardedHoneycombStore(
         cfg, heap_capacity=1024, shards=shards,
@@ -238,6 +243,24 @@ def live_replicated_smoke(shards: int = 2, replicas: int = 2,
                    Get(int_key(int(rng.integers(0, n_items))))))
     svc.drain()
     reads = [t.result() for t in tickets if not t.op.IS_WRITE]
+    # settle bursts: an epoch whose updates overflow a leaf log merges the
+    # leaf (pending page-table command -> metered fallback to the image
+    # delta); the next burst appends into the freshly merged leaves, so
+    # within a few rounds an epoch MUST ship over the log feed — a silent
+    # regression to delta-only would break the log-shipping claim
+    burst = [int_key(0), int_key(n_items - 1)]      # one leaf per shard
+    for _ in range(4):
+        if st.feed_stats.log_feed_epochs > 0:
+            break
+        for k in burst * 3:
+            st.update(k, b"l" * 12)
+        st.export_snapshot()
+    fs = st.feed_stats
+    assert fs.log_feed_epochs > 0, "log feed never engaged"
+    assert fs.log_bytes > 0 and fs.wire_bytes > 0
+    log_replays = sum(f.sync_stats.log_replays
+                      for sh in st.shards for f in sh.followers)
+    assert log_replays > 0, "no follower replayed a log payload on device"
     return {
         "shards": shards, "replicas": replicas, "items": n_items,
         "layout": cfg.layout,
@@ -247,6 +270,17 @@ def live_replicated_smoke(shards: int = 2, replicas: int = 2,
         "per_shard_replica_ops": st.per_shard_replica_ops,
         "replica_load_imbalance": st.replica_load_imbalance,
         "replication_bytes": st.replication_bytes,
+        "feed": {
+            "feed_bytes": fs.feed_bytes,
+            "log_feed_epochs": fs.log_feed_epochs,
+            "log_fallback_epochs": fs.log_fallback_epochs,
+            "log_bytes": fs.log_bytes,
+            "wire_bytes": fs.wire_bytes,
+            "fallback_bytes": fs.fallback_bytes,
+            "primary_egress_bytes": fs.primary_egress_bytes,
+            "relay_hop_bytes": fs.relay_hop_bytes,
+            "log_replays": log_replays,
+        },
         "primary_sync_bytes": st.sync_stats.bytes_synced,
         "replica_lag_epochs": st.replica_lag_epochs,
         "replica_staleness": st.replica_staleness,

@@ -13,8 +13,9 @@ from repro.core import (Delete, Get, HoneycombConfig, HoneycombService,
                         HoneycombStore, OutOfOrderScheduler, Put,
                         ReplicaGroup, ReplicationConfig, Scan, ServiceConfig,
                         ShardedHoneycombStore, StoreShard, Update,
-                        WIRE_ENTRY_OVERHEAD, decode_wire, decode_wire_stream,
-                        uniform_int_boundaries, wire_entry_nbytes)
+                        WIRE_ENTRY_OVERHEAD, WireDecodeError, decode_wire,
+                        decode_wire_stream, uniform_int_boundaries,
+                        wire_entry_nbytes)
 from repro.core.keys import int_key
 
 SMALL = HoneycombConfig(node_cap=16, log_cap=4, n_shortcuts=4)
@@ -67,14 +68,46 @@ def test_wire_roundtrip_every_op_type():
         if op.IS_WRITE:
             assert len(enc) == wire_entry_nbytes(
                 op.key, getattr(op, "value", b""))
-    with pytest.raises(Exception):
+    with pytest.raises(WireDecodeError):
         decode_wire(b"\x99\x00\x01\x00\x00X")     # unknown op code
-    with pytest.raises(AssertionError):
+    with pytest.raises(WireDecodeError):
         decode_wire(Put(b"key", b"value").encode_wire()[:-2])  # truncated
     with pytest.raises(AssertionError):
         Put(b"k", b"x" * 70000).encode_wire()     # over the u16 field limit
     with pytest.raises(AssertionError):
         Scan(b"a", b"z", expected_items=70000).encode_wire()
+
+
+def test_wire_decode_rejects_malformed_buffers_cleanly():
+    """Truncated or garbage buffers fail with ``WireDecodeError`` (a
+    ``ValueError``), never ``struct.error``/``IndexError`` — the replica
+    feed treats decode as all-or-nothing."""
+    good = Put(b"key", b"value").encode_wire()
+    assert decode_wire_stream(b"") == []         # empty stream is valid
+    for bad in (b"\x00", good[:3],               # inside the fixed header
+                good[:-1],                       # inside the payload
+                good + good[: WIRE_ENTRY_OVERHEAD - 1],   # truncated tail
+                b"\x7f" + good[1:],              # unknown op code
+                bytes([good[0]]) + b"\xff\xff" + good[3:]):  # huge keylen
+        with pytest.raises(WireDecodeError):
+            decode_wire_stream(bad)
+    assert issubclass(WireDecodeError, ValueError)
+    # SCAN's trailing u16 count is covered by the same contract
+    with pytest.raises(WireDecodeError):
+        decode_wire(Scan(b"a", b"z", expected_items=7).encode_wire()[:-1])
+
+
+def test_wire_roundtrip_zero_length_and_max_u16_fields():
+    """Edge geometry survives the codec: zero-length values (a PUT of the
+    empty string is one header + key, the meter's minimum) and keys/values
+    at the u16 field limit."""
+    edge = [Put(b"k", b""), Update(b"u" * 65535, b""),
+            Put(b"p", b"v" * 65535), Delete(b"d" * 65535), Get(b"")]
+    stream = b"".join(op.encode_wire() for op in edge)
+    assert decode_wire_stream(stream) == edge
+    assert len(Put(b"k", b"").encode_wire()) == wire_entry_nbytes(b"k", b"")
+    assert len(Put(b"p", b"v" * 65535).encode_wire()) == \
+        wire_entry_nbytes(b"p", b"v" * 65535)
 
 
 def test_wire_stream_roundtrip():

@@ -18,11 +18,13 @@ EXPL = HoneycombConfig(node_cap=16, log_cap=4, n_shortcuts=4,
 B2 = uniform_int_boundaries(200, 2)
 
 
-def replicated(cfg=SMALL, shards=1, replicas=2, policy="round_robin"):
+def replicated(cfg=SMALL, shards=1, replicas=2, policy="round_robin",
+               feed="log"):
     return ShardedHoneycombStore(
         cfg, heap_capacity=256, shards=shards,
         boundaries=B2 if shards == 2 else None,
-        replication=ReplicationConfig(replicas=replicas, policy=policy))
+        replication=ReplicationConfig(replicas=replicas, policy=policy,
+                                      feed=feed))
 
 
 def apply_random_ops(stores, oracle, rng, n, key_space=200):
@@ -145,8 +147,10 @@ def test_least_loaded_policy_balances_replica_lanes():
 def test_delta_feed_costs_o_replicas_times_dirty_rows():
     """Feeding N followers costs O(N x dirty_rows) bytes — each follower
     re-applies exactly the primary's delta (same bytes, same rows) — not
-    O(N x store_size), measured via per-replica SyncStats."""
-    st = replicated(replicas=3)
+    O(N x store_size), measured via per-replica SyncStats.  Pinned to the
+    image-row delta feed; the log feed's (much cheaper) accounting is
+    covered by tests/test_log_feed.py."""
+    st = replicated(replicas=3, feed="delta")
     for i in range(200):
         st.put(int_key(i), b"v" * 8)
     st.export_snapshot()                  # full publish + full follower copy
@@ -230,8 +234,9 @@ def test_epoch_and_staleness_lag_meters():
 def test_resumed_follower_catches_up_full_on_next_sync():
     """A follower that missed a delta cannot replay later deltas onto its
     stale base: the next feed after resume is a FULL copy, after which
-    delta feeding resumes."""
-    st = replicated(cfg=EXPL, replicas=2)
+    delta feeding resumes (pinned to the delta feed so the resumed-path
+    meters stay delta_syncs, not log_replays)."""
+    st = replicated(cfg=EXPL, replicas=2, feed="delta")
     g = st.shards[0]
     for i in range(60):
         st.put(int_key(i), b"v")
