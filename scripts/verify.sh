@@ -13,9 +13,14 @@
 #                              # follower-feed amplification sweep, the
 #                              # log-block sweep on BOTH snapshot layouts
 #                              # (packed one-DMA-per-dirty-node vs legacy
-#                              # per-field), and both store_dryrun LIVE
-#                              # smokes (sharded + replicated with the
-#                              # log-shipped feed engaged) on the packed
+#                              # per-field), a --read-backend
+#                              # fused,reference sweep of the device read
+#                              # path (fused megakernels + VMEM cache tier
+#                              # vs the jnp reference), and both
+#                              # store_dryrun LIVE smokes (sharded +
+#                              # replicated with the log-shipped feed
+#                              # engaged and fused-vs-reference equality
+#                              # + vmem_hits asserted) on the packed
 #                              # layout; results land in
 #                              # experiments/bench_results.json
 set -euo pipefail
@@ -31,7 +36,7 @@ if [[ "${1:-}" == "--smoke" ]]; then
         service_api,fig10_ycsb,fig12_latency,fig17_log_block \
         --tiny --pipeline serial,pipelined --replicas 1,2 \
         --feed log,delta --relay-depth 0,2 \
-        --layout packed,legacy --strict
+        --layout packed,legacy --read-backend fused,reference --strict
     # live deployment-shape smokes on the packed layout: assert the
     # one-image-DMA-per-dirty-node invariant survives the full stack,
     # and that the replicated store actually shipped (and replayed) the
@@ -41,11 +46,21 @@ import json
 from repro.launch.store_dryrun import live_replicated_smoke, live_sharded_smoke
 sh = live_sharded_smoke(shards=2, n_items=256, batch=32)
 assert sh["layout"] == "packed" and sh["image_dma_count"] > 0, sh
+# fused read path: the cache tier actually served descend levels from
+# VMEM, and the smoke's in-place fused-vs-reference equality held
+assert sh["read_path"]["backend"] == "fused", sh
+assert sh["read_path"]["vmem_hits"] > 0, sh
+assert sh["read_path"]["fused_matches_reference"], sh
 rp = live_replicated_smoke(shards=2, replicas=2, n_items=256, batch=32)
 assert rp["layout"] == "packed" and rp["primary_image_dmas"] > 0, rp
 feed = rp["feed"]
 assert feed["log_feed_epochs"] > 0 and feed["log_replays"] > 0, feed
 assert feed["log_bytes"] > 0 and feed["wire_bytes"] > 0, feed
+# followers inherited the cache tier over the feeds and their fused
+# reads matched the reference fallback
+assert rp["read_path"]["vmem_hits"] > 0, rp
+assert rp["read_path"]["followers_cache_resident"], rp
+assert rp["read_path"]["fused_matches_reference"], rp
 print(json.dumps({"live_sharded": sh, "live_replicated": rp},
                  indent=1, default=str))
 EOF

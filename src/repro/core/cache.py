@@ -1,27 +1,31 @@
-"""Interior-node cache + load balancer (paper Section 5).
+"""Interior-node cache + load balancer (paper Section 5), as built.
 
 On the FPGA the cache moves interior-node reads from PCIe (slow) to on-board
 DRAM (fast), the root lives in on-chip SRAM, and a load balancer sends some
 cache *hits* back to PCIe when DRAM is saturated so that the two off-chip
 pipes are both busy.
 
-TPU translation: all tree arrays live in HBM, so the tiers become
-  SRAM root cache        ->  root (+ top levels) packed into a small
-                             contiguous array that a Pallas kernel pins in
-                             VMEM via its BlockSpec (no HBM gather for the
-                             first levels of every request)
-  on-board DRAM cache    ->  the packed cache array itself: contiguous,
-                             sequential reads (vs. the random gathers the
-                             heap path costs)
-  PCIe path              ->  random gathers against the full heap arrays
-  load balancer          ->  routes a fraction of cache-hit level lookups to
-                             the heap path to keep both gather pipelines busy
+Here that tiering runs on device, end to end.  At every snapshot export
+``refresh`` walks the root + top ``cfg.cache_levels`` interior levels
+breadth-first and ``device_lids`` emits them as a NULL-padded LID vector
+that rides on ``TreeSnapshot.cache_lids`` (~KB on the sync feeds);
+``attach_cache_image`` (core/read_path.py) rebuilds the contiguous
+``[cache_slots, image_words]`` cache array from the resident heap image
+wherever a snapshot is staged — primary export, follower delta apply and
+log replay alike.  The fused read megakernels (kernels/fused_read.py) pin
+that array in VMEM via its BlockSpec and resolve every cached level with
+zero heap-image gathers and no pagetable/MVCC walk; levels below the
+cached frontier fall through to the heap path, and ``cfg.lb_fraction``
+deterministically routes a slice of cache-HIT lanes down the heap pipe
+anyway (the Section 5 dual-pipe trick — identical results, different byte
+split).  The device pipes are metered on ``CacheStats`` as
+``vmem_hits`` / ``heap_gathers`` / ``lb_routed``.
 
-The cache is software-managed on the host: a 4-way set-associative metadata
-table keyed by LID, refreshed at snapshot export, invalidated when the page
-table remaps a LID (Section 5: "the cache entry for the node with that LID
-is invalidated").  Benchmarks meter hit rates and the two paths' byte flows
-to reproduce Fig. 16.
+The host side of the structure remains: a set-associative metadata table
+keyed by LID, refreshed at export, invalidated when the page table remaps
+or frees a LID (Section 5: "the cache entry for the node with that LID is
+invalidated" — wired via ``PageTable.on_remap``), plus the host ``route``
+model benchmarks use for the Fig. 16 hit-rate/byte-split curves.
 """
 from __future__ import annotations
 
@@ -42,11 +46,23 @@ class CacheStats:
     slow_path_reads: int = 0     # routed to the heap ("PCIe")
     fast_bytes: int = 0
     slow_bytes: int = 0
+    # device read-path meters (fused megakernels, kernels/fused_read.py):
+    # per-level lookups resolved from the VMEM-pinned cache array, from the
+    # heap image, and the cache HITS the lb_fraction balancer routed down
+    # the heap pipe anyway (lb_routed is a subset of heap_gathers)
+    vmem_hits: int = 0
+    heap_gathers: int = 0
+    lb_routed: int = 0
 
     @property
     def hit_rate(self) -> float:
         t = self.hits + self.misses
         return self.hits / t if t else 0.0
+
+    @property
+    def device_hit_rate(self) -> float:
+        t = self.vmem_hits + self.heap_gathers
+        return self.vmem_hits / t if t else 0.0
 
 
 class InteriorCache:
@@ -107,19 +123,47 @@ class InteriorCache:
                 self.stats.invalidations += 1
 
     # ------------------------------------------------------- top-level pack
-    def refresh(self, tree):
-        """Rebuild the packed top-level image (root in 'SRAM', next level in
-        'DRAM') at snapshot export; the Pallas read kernel receives it as a
-        VMEM-resident block."""
+    def frontier_lids(self, tree) -> list[int]:
+        """Breadth-first LIDs of the root + top ``cfg.cache_levels`` tree
+        levels (level 0 = the root — the paper's SRAM tier; deeper levels
+        the DRAM tier), capped at ``cache_slots``.  Trees shorter than the
+        level budget just yield every node they have down to the leaves."""
+        cap = self.cfg.cache_slots
         lids = [tree.root_lid]
-        phys = tree.pt.lookup(tree.root_lid)
-        if int(tree.heap.ntype[phys]) == INTERIOR:
-            lids.append(int(tree.heap.left_child[phys]))
-            for i in range(int(tree.heap.nitems[phys])):
-                lids.append(int(tree.heap.svals[phys, i, 0]))
-        self.packed_lids = np.asarray(lids[: self.cfg.cache_slots], np.int64)
+        level = [tree.root_lid]
+        for _ in range(self.cfg.cache_levels - 1):
+            nxt: list[int] = []
+            for lid in level:
+                phys = tree.pt.lookup(lid)
+                if int(tree.heap.ntype[phys]) != INTERIOR:
+                    continue
+                nxt.append(int(tree.heap.left_child[phys]))
+                for i in range(int(tree.heap.nitems[phys])):
+                    nxt.append(int(tree.heap.svals[phys, i, 0]))
+            if not nxt or len(lids) + len(nxt) > cap:
+                break       # never cache a partial level: membership must
+            lids.extend(nxt)  # be decidable from the LID vector alone
+            level = nxt
+        return lids[:cap]
+
+    def refresh(self, tree):
+        """Rebuild the packed top-level frontier at snapshot export; the
+        fused Pallas read kernels receive its image rows as a VMEM-resident
+        block (``TreeSnapshot.cache_lids`` / ``cache_image``)."""
+        self.packed_lids = np.asarray(self.frontier_lids(tree), np.int64)
         for lid in self.packed_lids:
             self.lookup(int(lid), tree.pt.lookup(int(lid)))
+
+    def device_lids(self, tree=None) -> np.ndarray:
+        """The packed frontier as the fixed-shape i32 vector that rides on
+        ``TreeSnapshot.cache_lids``: ``refresh``'s LIDs, NULL-padded to
+        ``cache_slots`` (refreshes the frontier first when a tree is
+        given)."""
+        if tree is not None:
+            self.refresh(tree)
+        out = np.full((self.cfg.cache_slots,), NULL, np.int32)
+        out[: len(self.packed_lids)] = self.packed_lids
+        return out
 
     # ----------------------------------------------------- load balancer
     def route(self, lid: int, phys: int, nbytes: int,

@@ -25,6 +25,16 @@ import dataclasses
 # device-resident snapshot layouts (HoneycombConfig.layout)
 LAYOUTS = ("packed", "legacy")
 
+# device read-path backends (HoneycombConfig.read_backend):
+#   "fused"     — ONE fused traversal dispatch per read batch: descend +
+#                 leaf resolve + log merge + version resolution execute as a
+#                 single device call against the packed node image, with the
+#                 top interior levels resolved from the snapshot's VMEM-pinned
+#                 cache array (kernels/fused_read.py).
+#   "reference" — today's per-level jnp path (core/read_path.py), kept as the
+#                 tested op-for-op oracle the fused path is checked against.
+READ_BACKENDS = ("fused", "reference")
+
 
 def bucket_pow2(n: int) -> int:
     """Round a batch/delta length up to a power of two (1 for n <= 1).
@@ -64,6 +74,14 @@ class HoneycombConfig:
     cache_ways: int = 4         # set associativity of the metadata table
     load_balance: bool = True   # route some cache hits to the slow path
     lb_fast_fraction: float = 0.75  # fraction of hits served by the cache path
+    # device cache tier (kernels/fused_read.py): how many tree levels from
+    # the root are packed into the snapshot's contiguous cache array (the
+    # paper's SRAM root + DRAM top-interior tiers); lb_fraction is the
+    # Section 5 dual-pipe knob — the fraction of cache-HIT level lookups the
+    # fused kernel routes back to the heap-image pipe anyway (results are
+    # identical either way; only the byte split between the pipes moves).
+    cache_levels: int = 2
+    lb_fraction: float = 0.0
 
     # --- value overflow heap -----------------------------------------------
     overflow_words: int = 128   # slot size of the out-of-node value heap
@@ -84,6 +102,10 @@ class HoneycombConfig:
     # "legacy": per-field arrays — one row scatter per field, kept as the
     #           packed layout's op-for-op parity reference.
     layout: str = "packed"
+    # device read-path backend (see READ_BACKENDS above); "fused" falls back
+    # to the reference path automatically on legacy-layout snapshots, which
+    # carry no packed image for the megakernel to traverse
+    read_backend: str = "fused"
 
     def __post_init__(self):
         assert self.node_cap % self.n_shortcuts == 0, (
@@ -97,6 +119,12 @@ class HoneycombConfig:
         assert self.sync_every_k >= 1, "sync_every_k must be >= 1"
         assert self.layout in LAYOUTS, (
             f"unknown snapshot layout {self.layout!r} (one of {LAYOUTS})")
+        assert self.read_backend in READ_BACKENDS, (
+            f"unknown read_backend {self.read_backend!r} "
+            f"(one of {READ_BACKENDS})")
+        assert self.cache_levels >= 1, "cache the root level at least"
+        assert 0.0 <= self.lb_fraction <= 1.0, (
+            "lb_fraction is a routed fraction in [0, 1]")
 
     @property
     def segment_items(self) -> int:

@@ -25,6 +25,10 @@ class PageTable:
         # bumped on growth: a resident device table has the old shape and
         # must be republished in full
         self.generation = 0
+        # remap observer (paper Section 5: a page-table command for a LID
+        # invalidates that LID's interior-cache entry); the owning shard
+        # wires this to InteriorCache.invalidate
+        self.on_remap = None
 
     def _grow(self):
         cap = len(self.host)
@@ -49,11 +53,15 @@ class PageTable:
         self.host[lid] = phys
         self.pending[lid] = phys
         self.sync_commands += 1
+        if self.on_remap is not None:
+            self.on_remap(lid)
 
     def free_lid(self, lid: int):
         self.host[lid] = NULL
         self.pending[lid] = NULL
         self._free.append(lid)
+        if self.on_remap is not None:
+            self.on_remap(lid)
 
     def lookup(self, lid: int) -> int:
         return int(self.host[lid])

@@ -50,11 +50,23 @@ from .schema import FIELD_NAMES, NodeImageLayout
 class TreeSnapshot(NamedTuple):
     """Immutable device image of the store: ONE packed node-image array
     (every per-node field at its static layout offset — core/schema.py)
-    plus the page table and the two sync scalars."""
+    plus the page table and the two sync scalars.
+
+    ``cache_lids``/``cache_image`` are the device cache tier (paper
+    Section 5): the root + top interior levels packed contiguously so the
+    fused read kernels pin them in VMEM and resolve the first levels with
+    zero heap-image gathers.  Only ``cache_lids`` travels on the sync
+    feeds (~KB); ``cache_image`` is rebuilt device-side from the resident
+    image via ``attach_cache_image`` wherever a snapshot is (re)staged, so
+    its rows are bit-identical to the version-resolved heap rows by
+    construction.  ``None`` on legacy-era snapshots (fused reads fall back
+    to the reference path)."""
     image: jax.Array        # u32 [S, image_words] packed node images
     pagetable: jax.Array    # i32 [LIDS]
     root_lid: jax.Array     # i32 []
     read_version: jax.Array  # i32 []
+    cache_lids: jax.Array | None = None   # i32 [C], NULL-padded
+    cache_image: jax.Array | None = None  # u32 [C, image_words]
 
 
 class LegacyTreeSnapshot(NamedTuple):
@@ -123,6 +135,28 @@ def snapshot_fields(snap, cfg: HoneycombConfig):
     return snap
 
 
+def attach_cache_image(snap, cfg: HoneycombConfig):
+    """(Re)build the snapshot's contiguous cache tier from its own heap
+    image: one version-resolved image row per cached LID, zeros in the
+    NULL-padded slots.
+
+    Called wherever a snapshot is staged — primary export, delta apply,
+    follower log replay — so only the ~KB ``cache_lids`` vector ever
+    travels on a feed while every serving copy's ``cache_image`` rows stay
+    bit-identical to the heap rows the reference path would resolve (the
+    invariant the fused≡reference equivalence rests on)."""
+    if not isinstance(snap, TreeSnapshot) or snap.cache_lids is None:
+        return snap
+    view = snapshot_fields(snap, cfg)
+    lids = snap.cache_lids
+    phys = snap.pagetable[jnp.maximum(lids, 0)]
+    phys = _resolve_version(view, jnp.maximum(phys, 0),
+                            snap.read_version, cfg)
+    rows = jnp.where((lids != NULL)[:, None], snap.image[phys],
+                     jnp.uint32(0))
+    return snap._replace(cache_image=rows)
+
+
 class SnapshotDelta(NamedTuple):
     """One host->device sync's worth of changed state for the packed
     layout (paper Sections 3-4: node-buffer DMAs + batched page-table
@@ -140,6 +174,7 @@ class SnapshotDelta(NamedTuple):
     pt_phys: jax.Array       # i32 [P] new mappings (may repeat, identical)
     root_lid: jax.Array      # i32 []
     read_version: jax.Array  # i32 []
+    cache_lids: jax.Array | None = None  # i32 [C] next epoch's cache tier
 
 
 class LegacySnapshotDelta(NamedTuple):
@@ -177,7 +212,8 @@ class LegacySnapshotDelta(NamedTuple):
     read_version: jax.Array  # i32 []
 
 
-def apply_snapshot_delta(snap, delta, *, backend: str | None = None):
+def apply_snapshot_delta(snap, delta, *, backend: str | None = None,
+                         cfg: HoneycombConfig | None = None):
     """Scatter one sync's dirty rows + page-table commands into a resident
     device snapshot, yielding the next snapshot.
 
@@ -193,6 +229,12 @@ def apply_snapshot_delta(snap, delta, *, backend: str | None = None):
       * ``LegacySnapshotDelta`` — the per-field path: ``backend=None``
         scatters field by field, the kernel backends fuse all fields into
         one multi-field Pallas call (``snapshot_multi_scatter``).
+
+    For packed deltas ``cfg`` enables the cache tier: the delta's
+    ``cache_lids`` replace the snapshot's and the contiguous cache image is
+    rebuilt from the patched heap image (``attach_cache_image``) inside the
+    same jitted apply.  Without ``cfg`` the cache image is dropped (fused
+    reads then fall back to the reference path) rather than served stale.
     """
     if isinstance(delta, SnapshotDelta):
         if backend is None:
@@ -201,10 +243,16 @@ def apply_snapshot_delta(snap, delta, *, backend: str | None = None):
             from repro.kernels import ops  # deferred: kernels.ref imports us
             image = ops.snapshot_image_scatter(snap.image, delta.rows,
                                                delta.image, backend=backend)
-        return snap._replace(
+        cache_lids = snap.cache_lids if delta.cache_lids is None \
+            else delta.cache_lids
+        nxt = snap._replace(
             image=image,
             pagetable=snap.pagetable.at[delta.pt_lids].set(delta.pt_phys),
-            root_lid=delta.root_lid, read_version=delta.read_version)
+            root_lid=delta.root_lid, read_version=delta.read_version,
+            cache_lids=cache_lids)
+        if cfg is not None:
+            return attach_cache_image(nxt, cfg)
+        return nxt._replace(cache_image=None)
     if backend is None:
         upd = {f: getattr(snap, f).at[delta.rows].set(getattr(delta, f))
                for f in NODE_FIELDS}
@@ -317,6 +365,81 @@ def descend(snap, key: jax.Array, klen: jax.Array,
     return phys
 
 
+def fused_view(snap: TreeSnapshot, cfg: HoneycombConfig) -> SnapshotFields:
+    """Field view over the heap image CONCATENATED with the snapshot's
+    cache image: combined row indices >= S address cache rows.  Because
+    cache rows are bit-identical to their version-resolved heap rows
+    (``attach_cache_image``), any search code running on this view yields
+    the same results whether a level resolved from the cache or the heap —
+    THE structural argument behind fused ≡ reference."""
+    layout = NodeImageLayout.for_config(cfg)
+    combined = jnp.concatenate([snap.image, snap.cache_image], axis=0)
+    return SnapshotFields(pagetable=snap.pagetable, root_lid=snap.root_lid,
+                          read_version=snap.read_version,
+                          **layout.field_views(combined))
+
+
+def lb_routed_lanes(lane: jax.Array, lb_fraction: float) -> jax.Array:
+    """Deterministic Section-5 dual-pipe routing: lanes whose index mod 16
+    falls under round(lb_fraction * 16) send their cache-hit lookups down
+    the heap pipe anyway.  Compile-time constant per lb_fraction, identical
+    between the jnp oracle (lane = arange over the batch) and the Pallas
+    kernels (lane = program id), so routing never perturbs results."""
+    return (lane % 16) < int(round(lb_fraction * 16))
+
+
+def descend_fused(snap: TreeSnapshot, view: SnapshotFields, key: jax.Array,
+                  klen: jax.Array, cfg: HoneycombConfig, *,
+                  lb_fraction: float = 0.0):
+    """Cache-tiered descend (the fused path's oracle): a level whose LID is
+    in the snapshot's cache tier resolves straight to its cache row
+    (combined index S + slot — no pagetable lookup, no MVCC walk, zero heap
+    gathers), everything below the cached frontier falls through to the
+    heap path, and an ``lb_fraction`` slice of cache-HIT lanes is routed to
+    the heap pipe anyway (Section 5's load balancer: identical results,
+    different byte split).  ``view`` must be ``fused_view(snap, cfg)``.
+
+    Returns (leaf phys in the combined view, meters i32[3] =
+    [vmem_hits, heap_gathers, lb_routed] counted over traversed levels).
+    """
+    S = snap.image.shape[0]
+    clids = snap.cache_lids
+    B = key.shape[0]
+    rv = view.read_version
+    lid = jnp.broadcast_to(view.root_lid, (B,))
+    routed_lane = lb_routed_lanes(jnp.arange(B), lb_fraction)
+
+    def level(_, state):
+        lid, phys, done, vh, hg, lr = state
+        eq = clids[None, :] == lid[:, None]
+        hit = eq.any(axis=1) & (lid != NULL)
+        slot = jnp.argmax(eq, axis=1).astype(jnp.int32)
+        use_cache = hit & ~routed_lane
+        heap_phys = _resolve_version(view, view.pagetable[lid], rv, cfg)
+        cur = jnp.where(use_cache, S + slot, heap_phys)
+        cur = jnp.where(done, phys, cur)
+        live = ~done
+        vh = vh + (use_cache & live).sum(dtype=jnp.int32)
+        hg = hg + (~use_cache & live).sum(dtype=jnp.int32)
+        lr = lr + (hit & routed_lane & live).sum(dtype=jnp.int32)
+        is_leaf = view.ntype[cur] == LEAF
+        seg = _shortcut_floor(view, cur, key, klen)
+        idx = _segment_floor(view, cur, seg, key, klen, cfg)
+        child = jnp.where(idx >= 0,
+                          view.svals[cur, jnp.maximum(idx, 0), 0]
+                          .astype(jnp.int32),
+                          view.left_child[cur])
+        new_done = done | is_leaf
+        new_lid = jnp.where(new_done, lid, child)
+        return (new_lid, jnp.where(done, phys, cur), new_done, vh, hg, lr)
+
+    z = jnp.zeros((), jnp.int32)
+    _, phys, _, vh, hg, lr = jax.lax.fori_loop(
+        0, cfg.max_height, level,
+        (lid, jnp.zeros((B,), jnp.int32), jnp.zeros((B,), bool), z, z, z))
+    return phys, jnp.stack([vh, hg, lr])
+
+
 # --------------------------------------------------------------------------
 # leaf-node scan engine (RSU)
 # --------------------------------------------------------------------------
@@ -425,14 +548,24 @@ def batched_scan(snap, lo: jax.Array, lolen: jax.Array,
     sibling leaves with bounded budget (Section 3.3).  Layout-agnostic:
     packed snapshots are read through static image offsets."""
     snap = snapshot_fields(snap, cfg)
+    leaf0 = descend(snap, lo, lolen, cfg)
+    return scan_from_leaf(snap, leaf0, lo, lolen, hi, hilen, cfg)
+
+
+def scan_from_leaf(snap: SnapshotFields, leaf0: jax.Array,
+                   lo: jax.Array, lolen: jax.Array,
+                   hi: jax.Array, hilen: jax.Array,
+                   cfg: HoneycombConfig) -> ScanResult:
+    """The scan engine proper, starting from pre-descended leaf slots —
+    shared verbatim between the reference path (heap-view ``snap``, heap
+    ``leaf0``) and the fused oracle (combined cache+heap view,
+    ``descend_fused`` leaf slots), so the two paths cannot drift."""
     c = cfg
     B = lo.shape[0]
     M = c.max_scan_items
     KW, VW = c.key_words, c.val_words
     T = c.node_cap + c.log_cap
     rv = snap.read_version
-
-    leaf0 = descend(snap, lo, lolen, c)
 
     out_keys = jnp.zeros((B, M, KW), jnp.uint32)
     out_klens = jnp.zeros((B, M), jnp.int32)
@@ -521,6 +654,13 @@ def batched_get(snap, key: jax.Array, klen: jax.Array,
                 cfg: HoneycombConfig) -> GetResult:
     """GET(K) implemented as SCAN(K, K) + post-processing (Section 3.3)."""
     res = batched_scan(snap, key, klen, key, klen, cfg)
+    return get_from_scan(res, key, klen)
+
+
+def get_from_scan(res: ScanResult, key: jax.Array,
+                  klen: jax.Array) -> GetResult:
+    """The GET equality post-pass over a SCAN(K, K) result (shared with the
+    fused oracle)."""
     eq = (jax_key_cmp(res.keys, res.keylens, key[:, None, :],
                       klen[:, None]) == 0) \
         & (jnp.arange(res.keys.shape[1])[None, :] < res.count[:, None])

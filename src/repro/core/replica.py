@@ -100,7 +100,7 @@ import numpy as np
 from .api import Routing, decode_wire_stream
 from .config import ReplicationConfig, bucket_pow2
 from .heap import LOG_DELETE, LOG_INSERT, LOG_UPDATE
-from .read_path import NODE_FIELDS, TreeSnapshot
+from .read_path import NODE_FIELDS, TreeSnapshot, attach_cache_image
 from .schema import NodeImageLayout
 from .shard import (LogPayload, StagedSync, StoreShard, SyncStats,
                     _DELTA_BACKEND, _jit_apply_delta)
@@ -118,6 +118,13 @@ def _jit_log_replay(image, rows, slots, entries, offs, backend):
     from repro.kernels import ops as kernel_ops
     return kernel_ops.log_replay_scatter(image, rows, slots, entries,
                                          offs=offs, backend=backend)
+
+
+# rebuild a follower's VMEM cache tier from its own replayed image (the
+# log feed ships no cache rows — replayable epochs preserve the tree
+# shape, so the base's cache_lids frontier stays valid and only the row
+# CONTENTS must be re-gathered)
+_jit_attach_cache = jax.jit(attach_cache_image, static_argnames="cfg")
 
 
 @dataclasses.dataclass
@@ -163,8 +170,9 @@ class FollowerReplica:
     buffers, SyncStats, and epoch/read-version watermark.  Fed only by the
     primary's ``StagedSync`` payloads; never written directly."""
 
-    def __init__(self, replica_id: int, in_sync: bool = True):
+    def __init__(self, replica_id: int, in_sync: bool = True, cfg=None):
         self.replica_id = replica_id
+        self.cfg = cfg                 # layout schema for cache re-attach
         self.sync_stats = SyncStats()
         self.epoch = 0                 # primary epoch at our last publish
         self.paused = False            # fault injection / maintenance
@@ -191,7 +199,8 @@ class FollowerReplica:
             # (one image-row DMA per dirty node on the packed layout — the
             # delta type carries the layout, so the replay is layout-free)
             self._standby = _jit_apply_delta(base, payload.delta,
-                                             backend=_DELTA_BACKEND)
+                                             backend=_DELTA_BACKEND,
+                                             cfg=self.cfg)
             stats.delta_syncs += 1
             stats.delta_rows += payload.delta_rows
             stats.bytes_synced += payload.nbytes
@@ -233,8 +242,11 @@ class FollowerReplica:
             rows, slots, entries, offs = marshalled
             image = _jit_log_replay(base.image, rows, slots, entries, offs,
                                     _LOG_BACKEND)
-        self._standby = base._replace(
+        snap = base._replace(
             image=image, read_version=jnp.int32(lp.read_version))
+        if self.cfg is not None:
+            snap = _jit_attach_cache(snap, cfg=self.cfg)
+        self._standby = snap
         self._standby_rv = payload.read_version
         stats.log_replays += 1
         stats.log_entries += lp.entries
@@ -266,7 +278,8 @@ class ReplicaGroup:
         self.primary = primary
         self.replication = replication or ReplicationConfig()
         fresh = (primary._snapshot is None and primary._standby is None)
-        self.followers = [FollowerReplica(i + 1, in_sync=fresh)
+        self.followers = [FollowerReplica(i + 1, in_sync=fresh,
+                                          cfg=primary.cfg)
                           for i in range(self.replication.replicas - 1)]
         self.lagging_skips = 0         # batches redirected off a stale follower
         self.replication_s = 0.0       # wall time spent feeding followers

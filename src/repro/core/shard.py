@@ -58,21 +58,31 @@ from .keys import pack_keys
 from .pipeline import PipelineStats
 from .read_path import (NODE_FIELDS, GetResult, LegacySnapshotDelta,
                         LegacyTreeSnapshot, ScanResult, SnapshotDelta,
-                        TreeSnapshot, apply_snapshot_delta, batched_get,
-                        batched_scan)
+                        TreeSnapshot, apply_snapshot_delta,
+                        attach_cache_image, batched_get, batched_scan)
 from .schema import NARROWED_FIELDS, NodeImageLayout
+from repro.kernels import ops as kernel_ops
 
 # jit the accelerator entry points once per (config, snapshot-shape): the
 # eager op-by-op dispatch otherwise accumulates thousands of tiny LLVM JIT
 # dylibs across a benchmark run (vm.max_map_count exhaustion)
 _jit_get = jax.jit(batched_get, static_argnames="cfg")
 _jit_scan = jax.jit(batched_scan, static_argnames="cfg")
+# the fused read path (ONE traversal dispatch per batch, cache tier pinned
+# in VMEM — kernels/fused_read.py): compiled Pallas on TPU, the jnp oracle
+# everywhere else (XLA:CPU lowers it; interpret-mode parity is tested)
+_READ_KERNEL_BACKEND = "pallas" if jax.default_backend() == "tpu" else "ref"
+_jit_get_fused = jax.jit(kernel_ops.batched_get_fused,
+                         static_argnames=("cfg", "lb_fraction", "backend"))
+_jit_scan_fused = jax.jit(kernel_ops.batched_scan_fused,
+                          static_argnames=("cfg", "lb_fraction", "backend"))
 # the delta-sync scatter; NOT donated — old snapshots held by in-flight
 # batches must keep answering at their read version.  On TPU the node-field
 # scatters fuse into ONE Pallas multi-field kernel call; elsewhere the jnp
 # oracle path lowers through XLA (kernels/ops.py dispatch).
 _DELTA_BACKEND = "pallas" if jax.default_backend() == "tpu" else None
-_jit_apply_delta = jax.jit(apply_snapshot_delta, static_argnames="backend")
+_jit_apply_delta = jax.jit(apply_snapshot_delta,
+                           static_argnames=("backend", "cfg"))
 
 # snapshot fields narrowed to int32 on device (host keeps 64-bit authority)
 # — derived from the one layout schema, not hand-kept
@@ -183,6 +193,10 @@ class StoreShard:
         self.shard_id = shard_id
         self.tree = HoneycombTree(self.cfg, heap_capacity)
         self.cache = InteriorCache(self.cfg)
+        # Section 5: a page-table command for a LID invalidates that LID's
+        # cache entry — every remap/free notifies the interior cache, so a
+        # stale physical address can never serve from the metadata table
+        self.tree.pt.on_remap = self.cache.invalidate
         self.sync_stats = SyncStats()
         self._snapshot: TreeSnapshot | None = None
         self._snapshot_dirty = True
@@ -344,6 +358,10 @@ class StoreShard:
                      and self._heap_gen == h.generation
                      and self._pt_gen == t.pt.generation
                      and frac <= self.cfg.delta_full_threshold)
+        # the interior-cache update rides along with the sync DMA: refresh
+        # BEFORE publishing so the staged snapshot carries the epoch's cache
+        # frontier (cache_lids) and its VMEM tier mirrors the standby
+        self.cache.refresh(t)
         bytes0 = stats.bytes_synced
         dmas0, ibytes0 = stats.image_dma_count, stats.image_bytes
         if can_delta:
@@ -365,10 +383,6 @@ class StoreShard:
         self._snapshot_dirty = False
         self._writes_since_sync = 0
         self._standby = snap
-        # the interior-cache update rides along with the sync DMA (staging
-        # time, when tree state == standby contents); a flip never touches
-        # it, so the cache always mirrors the newest staged epoch
-        self.cache.refresh(t)
         # captured host-side (never block on the device scalar): the read
         # version the standby will answer at once flipped
         self._standby_rv = int(t.versions.read_version())
@@ -488,11 +502,15 @@ class StoreShard:
             img = layout.pack(h)
             stats.bytes_synced += img.nbytes
             stats.image_dma_count += 1
-            return TreeSnapshot(
+            snap = TreeSnapshot(
                 image=jnp.asarray(img),
                 pagetable=dev(pt_image),
                 root_lid=jnp.int32(t.root_lid),
-                read_version=jnp.int32(t.versions.read_version()))
+                read_version=jnp.int32(t.versions.read_version()),
+                cache_lids=jnp.asarray(self.cache.device_lids()))
+            # materialize the VMEM cache tier device-side from the image
+            # just shipped — only the ~KB LID vector crossed the bus
+            return attach_cache_image(snap, self.cfg)
         stats.image_dma_count += len(NODE_FIELDS)
         fields = {f: dev(getattr(h, f),
                          np.int32 if f in _I32_FIELDS else None)
@@ -542,7 +560,8 @@ class StoreShard:
                 image=jnp.asarray(layout.pack(h, rows_p)),
                 pt_lids=jnp.asarray(lids_p), pt_phys=jnp.asarray(phys_p),
                 root_lid=jnp.int32(t.root_lid),
-                read_version=jnp.int32(t.versions.read_version()))
+                read_version=jnp.int32(t.versions.read_version()),
+                cache_lids=jnp.asarray(self.cache.device_lids()))
         else:
             stats.image_dma_count += len(rows) * len(NODE_FIELDS)
             fields = {}
@@ -559,7 +578,8 @@ class StoreShard:
                 **fields)
         stats.bytes_synced += nbytes
         self._staged_delta = delta   # replayable by follower replicas
-        return _jit_apply_delta(base, delta, backend=_DELTA_BACKEND)
+        return _jit_apply_delta(base, delta, backend=_DELTA_BACKEND,
+                                cfg=self.cfg)
 
     @staticmethod
     def _pad_index(idx: np.ndarray, size: int) -> np.ndarray:
@@ -570,6 +590,28 @@ class StoreShard:
             [idx, np.full(size - len(idx), idx[-1], np.int32)])
 
     # ------------------------------------------------- accelerated reads
+    def _read_backend_for(self, snap) -> str:
+        """Effective backend for one device dispatch.  The fused megakernel
+        path needs a packed snapshot with the cache tier attached; legacy
+        layouts, cache-less snapshots (e.g. a delta applied without cfg) and
+        ``cfg.read_backend="reference"`` all serve through the staged jnp
+        reference path."""
+        if (self.cfg.read_backend == "fused"
+                and isinstance(snap, TreeSnapshot)
+                and snap.cache_lids is not None
+                and snap.cache_image is not None):
+            return "fused"
+        return "reference"
+
+    def _note_read_meters(self, meters):
+        """Fold one fused dispatch's device meters into CacheStats (the
+        dispatching shard accounts follower-served batches too)."""
+        m = np.asarray(meters)
+        s = self.cache.stats
+        s.vmem_hits += int(m[0])
+        s.heap_gathers += int(m[1])
+        s.lb_routed += int(m[2])
+
     def _snapshot_for_read(self) -> TreeSnapshot:
         """The snapshot device batches execute against.  "explicit" policy
         reads the resident (possibly stale, always consistent) snapshot;
@@ -606,10 +648,20 @@ class StoreShard:
         self.pipeline_stats.dispatched_lanes += len(keys)
         self.pipeline_stats.padded_lanes += len(padded)
         lanes, lens = pack_keys(padded, self.cfg.key_words)
+        rb = self._read_backend_for(snap)
+        kernel_ops.record_read_dispatch("get", rb, self.cfg)
         lo, hi = self.tree.epochs.accel_begin_batch(len(keys))
         try:
-            res: GetResult = _jit_get(
-                snap, jnp.asarray(lanes), jnp.asarray(lens), cfg=self.cfg)
+            if rb == "fused":
+                res, meters = _jit_get_fused(
+                    snap, jnp.asarray(lanes), jnp.asarray(lens),
+                    cfg=self.cfg, lb_fraction=self.cfg.lb_fraction,
+                    backend=_READ_KERNEL_BACKEND)
+                self._note_read_meters(meters)
+            else:
+                res = _jit_get(
+                    snap, jnp.asarray(lanes), jnp.asarray(lens),
+                    cfg=self.cfg)
             found = np.asarray(res.found)
             vals = np.asarray(res.vals)
             vlens = np.asarray(res.vallens)
@@ -649,11 +701,21 @@ class StoreShard:
         self.pipeline_stats.padded_lanes += len(padded)
         lo_l, lo_n = pack_keys([r[0] for r in padded], self.cfg.key_words)
         hi_l, hi_n = pack_keys([r[1] for r in padded], self.cfg.key_words)
+        rb = self._read_backend_for(snap)
+        kernel_ops.record_read_dispatch("scan", rb, self.cfg)
         slo, shi = self.tree.epochs.accel_begin_batch(len(ranges))
         try:
-            res: ScanResult = _jit_scan(
-                snap, jnp.asarray(lo_l), jnp.asarray(lo_n),
-                jnp.asarray(hi_l), jnp.asarray(hi_n), cfg=self.cfg)
+            if rb == "fused":
+                res, meters = _jit_scan_fused(
+                    snap, jnp.asarray(lo_l), jnp.asarray(lo_n),
+                    jnp.asarray(hi_l), jnp.asarray(hi_n), cfg=self.cfg,
+                    lb_fraction=self.cfg.lb_fraction,
+                    backend=_READ_KERNEL_BACKEND)
+                self._note_read_meters(meters)
+            else:
+                res = _jit_scan(
+                    snap, jnp.asarray(lo_l), jnp.asarray(lo_n),
+                    jnp.asarray(hi_l), jnp.asarray(hi_n), cfg=self.cfg)
             count = np.asarray(res.count)
             keys = np.asarray(res.keys)
             klens = np.asarray(res.keylens)

@@ -1,0 +1,336 @@
+"""Fused device-resident GET/SCAN megakernels (paper Sections 4-5).
+
+One ``pallas_call`` executes the WHOLE per-request traversal — multi-level
+descend over the packed node image, leaf resolve, order-hint log merge,
+MVCC version resolution — where the reference path (core/read_path.py)
+issues one gather storm per level.  The grid iterates over the request
+batch (one program per request, ``PrefetchScalarGridSpec`` carrying the
+root LID + read version as scalars), so a read batch costs ONE device
+dispatch regardless of tree height or scan budget.
+
+The paper's cache tiers run for real here: the snapshot's contiguous
+``[cache_slots, image_words]`` cache array (root + top interior levels,
+packed at export — core/cache.py / ``attach_cache_image``) arrives through
+a plain VMEM BlockSpec, pinning it on-core for every program; a descend
+level whose LID is in the cache resolves from that block under a
+``lax.cond`` — the heap-image load, pagetable lookup and MVCC walk are
+genuinely not executed — while levels below the cached frontier fall
+through to dynamic row loads against the heap image (``pltpu.ANY`` +
+``pl.ds``, the ``log_replay_scatter`` addressing idiom).  The compile-time
+``lb_fraction`` knob deterministically routes a slice of cache-HIT
+programs down the heap pipe anyway (Section 5's dual-pipe load balancer);
+per-program ``[vmem_hits, heap_gathers, lb_routed]`` meters come back as
+an output block.
+
+Field decoding inside the body reuses ``NodeImageLayout.field_views`` on
+single ``[1, image_words]`` rows and the search/merge helpers from
+core/read_path.py (``_shortcut_floor``/``_segment_floor``/
+``_resolve_leaf``) on the resulting one-row views — the kernel and the
+jnp oracle (``kernels/ref.py`` ``batched_*_fused_ref``) share the actual
+search arithmetic, so interpret-mode parity pins only the traversal
+plumbing.  The oracle is what XLA:CPU lowers; ``interpret=True`` is the
+CPU-testable kernel path, compiled Mosaic the TPU one.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import read_path as _rp
+from repro.core.heap import LEAF, NULL
+from repro.core.keys import jax_key_cmp
+from repro.core.schema import NodeImageLayout
+
+
+def _row_view(layout, row, rv):
+    """One-row SnapshotFields over a [1, image_words] image row: the same
+    static-offset decode the reference path applies to the whole image."""
+    return _rp.SnapshotFields(read_version=rv, **layout.field_views(row))
+
+
+def _fused_kernel(cfg, routed_k: int, mode: str):
+    """Build the megakernel body.  ``mode`` is "get" or "scan"; both share
+    the descend + floor + forward-scan spine (GET is SCAN(K, K) plus the
+    equality post-pass, exactly as in the reference path)."""
+    layout = NodeImageLayout.for_config(cfg)
+    IW = layout.image_words
+    M = cfg.max_scan_items
+    T = cfg.node_cap + cfg.log_cap
+    KW, VW = cfg.key_words, cfg.val_words
+
+    def kernel(scal_ref, lo_ref, lolen_ref, hi_ref, hilen_ref, clids_ref,
+               cimg_ref, pt_ref, img_ref, *out_refs):
+        rv = scal_ref[1]
+        lo = lo_ref[...]                       # [1, KW]
+        lolen = lolen_ref[...]                 # [1]
+        hi = hi_ref[...]
+        hilen = hilen_ref[...]
+        clids = clids_ref[...]                 # [C]
+        cimg = cimg_ref[...]                   # [C, IW] — the VMEM pin
+        lane = pl.program_id(0)
+        routed = (lane % 16) < routed_k
+        z = jnp.zeros((1,), jnp.int32)
+        rows1 = jnp.arange(1)
+
+        def load_row(phys):                    # dynamic heap-image row load
+            return pl.load(img_ref, (pl.ds(jnp.maximum(phys, 0), 1),
+                                     slice(None)))
+
+        def view1(row):
+            return _row_view(layout, row, rv)
+
+        def fetch_heap(lid):
+            """pagetable lookup + MVCC old-version walk + row load — the
+            slow pipe (only executed below the cached frontier or for
+            lb-routed lanes, via lax.cond)."""
+            p0 = pl.load(pt_ref, (pl.ds(jnp.maximum(lid, 0), 1),))[0]
+
+            def step(_, p):
+                v = view1(load_row(p))
+                too_new = (v.version[0] > rv) & (v.oldptr[0] != NULL)
+                return jnp.where(too_new, v.oldptr[0], p)
+
+            p = jax.lax.fori_loop(0, cfg.max_version_chain, step,
+                                  jnp.maximum(p0, 0))
+            return load_row(p)
+
+        # ---- descend: cache tier first, heap fall-through ----------------
+        def level(_, state):
+            lid, row, done, vh, hg, lr = state
+            eq = clids == lid
+            hit = eq.any() & (lid != NULL)
+            slot = jnp.argmax(eq).astype(jnp.int32)
+            use_cache = hit & ~routed
+
+            def from_cache():
+                return jax.lax.dynamic_slice(cimg, (slot, 0), (1, IW))
+
+            new_row = jax.lax.cond(
+                done, lambda: row,
+                lambda: jax.lax.cond(use_cache, from_cache,
+                                     lambda: fetch_heap(lid)))
+            live = ~done
+            vh = vh + (use_cache & live).astype(jnp.int32)
+            hg = hg + (~use_cache & live).astype(jnp.int32)
+            lr = lr + (hit & routed & live).astype(jnp.int32)
+            v = view1(new_row)
+            is_leaf = v.ntype[0] == LEAF
+            seg = _rp._shortcut_floor(v, z, lo, lolen)
+            idx = _rp._segment_floor(v, z, seg, lo, lolen, cfg)
+            child = jnp.where(
+                idx[0] >= 0,
+                v.svals[0, jnp.maximum(idx[0], 0), 0].astype(jnp.int32),
+                v.left_child[0])
+            new_done = done | is_leaf
+            new_lid = jnp.where(new_done, lid, child)
+            return new_lid, new_row, new_done, vh, hg, lr
+
+        zi = jnp.zeros((), jnp.int32)
+        root = scal_ref[0]
+        _, leaf_row, _, vh, hg, lr = jax.lax.fori_loop(
+            0, cfg.max_height, level,
+            (root, load_row(jnp.zeros((), jnp.int32)),
+             jnp.zeros((), bool), zi, zi, zi))
+
+        # ---- floor pre-pass: walk left until a visible key <= lo ---------
+        def floor_step(_, state):
+            row, fkeys, fklens, fvals, fvlens, have = state
+            keys, klens, vals, vlens, live = _rp._resolve_leaf(
+                view1(row), z, cfg)
+            leq = live & (jax_key_cmp(keys, klens, lo[:, None, :],
+                                      lolen[:, None]) <= 0)
+            idx = jnp.where(leq, jnp.arange(T)[None, :], -1).max(axis=1)
+            found = idx >= 0
+            sel = jnp.maximum(idx, 0)
+            upd = found & ~have
+            fkeys = jnp.where(upd[:, None], keys[rows1, sel], fkeys)
+            fklens = jnp.where(upd, klens[rows1, sel], fklens)
+            fvals = jnp.where(upd[:, None], vals[rows1, sel], fvals)
+            fvlens = jnp.where(upd, vlens[rows1, sel], fvlens)
+            have = have | found
+            nxt = view1(row).lsib[0]
+            can_move = (~have[0]) & (nxt != NULL)
+            new_row = jax.lax.cond(can_move, lambda: fetch_heap(nxt),
+                                   lambda: row)
+            return new_row, fkeys, fklens, fvals, fvlens, have
+
+        _, fkeys, fklens, fvals, fvlens, have_floor = jax.lax.fori_loop(
+            0, cfg.max_scan_leaves, floor_step,
+            (leaf_row, jnp.zeros((1, KW), jnp.uint32), z,
+             jnp.zeros((1, VW), jnp.uint32), z, jnp.zeros((1,), bool)))
+
+        emit_floor = have_floor & (jax_key_cmp(fkeys, fklens, hi,
+                                               hilen) <= 0)
+        out_keys = jnp.zeros((1, M, KW), jnp.uint32) \
+            .at[:, 0].set(jnp.where(emit_floor[:, None], fkeys, 0))
+        out_klens = jnp.zeros((1, M), jnp.int32) \
+            .at[:, 0].set(jnp.where(emit_floor, fklens, 0))
+        out_vals = jnp.zeros((1, M, VW), jnp.uint32) \
+            .at[:, 0].set(jnp.where(emit_floor[:, None], fvals, 0))
+        out_vlens = jnp.zeros((1, M), jnp.int32) \
+            .at[:, 0].set(jnp.where(emit_floor, fvlens, 0))
+        count = emit_floor.astype(jnp.int32)
+
+        # ---- forward scan across sibling leaves --------------------------
+        def leaf_step(_, state):
+            (row, out_keys, out_klens, out_vals, out_vlens, count, trunc,
+             done) = state
+            keys, klens, vals, vlens, live = _rp._resolve_leaf(
+                view1(row), z, cfg)
+            gt_lo = jax_key_cmp(keys, klens, lo[:, None, :],
+                                lolen[:, None]) > 0
+            leq_hi = jax_key_cmp(keys, klens, hi[:, None, :],
+                                 hilen[:, None]) <= 0
+            emit = live & gt_lo & leq_hi & ~done[:, None]
+            local = jnp.cumsum(emit, axis=1) - 1
+            slot = count[:, None] + local
+            ok = emit & (slot < M)
+            slot_c = jnp.where(ok, jnp.clip(slot, 0, M - 1), M)
+            br = rows1[:, None]
+            out_keys = out_keys.at[br, slot_c].set(keys, mode="drop")
+            out_klens = out_klens.at[br, slot_c].set(klens, mode="drop")
+            out_vals = out_vals.at[br, slot_c].set(vals, mode="drop")
+            out_vlens = out_vlens.at[br, slot_c].set(vlens, mode="drop")
+            count = count + ok.sum(axis=1)
+            trunc = trunc | (emit & ~ok).any(axis=1)
+            past_hi = (live & ~leq_hi).any(axis=1)
+            nxt = view1(row).rsib[0]
+            done = done | past_hi | (nxt == NULL) | trunc
+            new_row = jax.lax.cond(done[0], lambda: row,
+                                   lambda: fetch_heap(nxt))
+            return (new_row, out_keys, out_klens, out_vals, out_vlens,
+                    count, trunc, done)
+
+        state = (leaf_row, out_keys, out_klens, out_vals, out_vlens, count,
+                 jnp.zeros((1,), bool), jnp.zeros((1,), bool))
+        (_, out_keys, out_klens, out_vals, out_vlens, count, trunc,
+         done) = jax.lax.fori_loop(0, cfg.max_scan_leaves, leaf_step, state)
+        trunc = trunc | ~done
+
+        if mode == "scan":
+            (count_ref, keys_ref, klens_ref, vals_ref, vlens_ref, trunc_ref,
+             meters_ref) = out_refs
+            count_ref[...] = count[:, None]
+            keys_ref[...] = out_keys
+            klens_ref[...] = out_klens
+            vals_ref[...] = out_vals
+            vlens_ref[...] = out_vlens
+            trunc_ref[...] = trunc.astype(jnp.int32)[:, None]
+        else:
+            eq = (jax_key_cmp(out_keys, out_klens, lo[:, None, :],
+                              lolen[:, None]) == 0) \
+                & (jnp.arange(M)[None, :] < count[:, None])
+            found = eq.any(axis=1)
+            idx = jnp.argmax(eq, axis=1)
+            found_ref, vals_ref, vlens_ref, meters_ref = out_refs
+            found_ref[...] = found.astype(jnp.int32)[:, None]
+            vals_ref[...] = out_vals[rows1, idx]
+            vlens_ref[...] = out_vlens[rows1, idx][:, None]
+        meters_ref[...] = jnp.stack([vh, hg, lr])[None, :]
+
+    return kernel
+
+
+def _common_specs(KW, C, IW):
+    """in_specs shared by both megakernels: per-request key blocks, the
+    cache tier resident in VMEM, page table + heap image in ANY (addressed
+    dynamically by the body)."""
+    return [
+        pl.BlockSpec((1, KW), lambda i, s: (i, 0)),      # lo key
+        pl.BlockSpec((1,), lambda i, s: (i,)),           # lo len
+        pl.BlockSpec((1, KW), lambda i, s: (i, 0)),      # hi key
+        pl.BlockSpec((1,), lambda i, s: (i,)),           # hi len
+        pl.BlockSpec((C,), lambda i, s: (0,)),           # cache lids (VMEM)
+        pl.BlockSpec((C, IW), lambda i, s: (0, 0)),      # cache image (VMEM)
+        pl.BlockSpec(memory_space=pltpu.ANY),            # page table
+        pl.BlockSpec(memory_space=pltpu.ANY),            # heap image
+    ]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "lb_fraction",
+                                             "interpret"))
+def batched_scan_fused(image, pagetable, root_lid, read_version, cache_lids,
+                       cache_image, lo, lolen, hi, hilen, *, cfg,
+                       lb_fraction: float = 0.0, interpret: bool = False):
+    """Fused SCAN(K_l, K_u): ONE dispatch for the whole batch.  Returns
+    (ScanResult, meters i32[3]) matching ``ref.batched_scan_fused_ref``."""
+    B = lo.shape[0]
+    S, IW = image.shape
+    C = cache_lids.shape[0]
+    M, KW, VW = cfg.max_scan_items, cfg.key_words, cfg.val_words
+    scal = jnp.stack([root_lid.astype(jnp.int32),
+                      read_version.astype(jnp.int32)])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B,),
+        in_specs=_common_specs(KW, C, IW),
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i, s: (i, 0)),       # count
+            pl.BlockSpec((1, M, KW), lambda i, s: (i, 0, 0)),
+            pl.BlockSpec((1, M), lambda i, s: (i, 0)),
+            pl.BlockSpec((1, M, VW), lambda i, s: (i, 0, 0)),
+            pl.BlockSpec((1, M), lambda i, s: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, s: (i, 0)),       # truncated
+            pl.BlockSpec((1, 3), lambda i, s: (i, 0)),       # meters
+        ],
+    )
+    count, keys, klens, vals, vlens, trunc, meters = pl.pallas_call(
+        _fused_kernel(cfg, int(round(lb_fraction * 16)), "scan"),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, M, KW), jnp.uint32),
+            jax.ShapeDtypeStruct((B, M), jnp.int32),
+            jax.ShapeDtypeStruct((B, M, VW), jnp.uint32),
+            jax.ShapeDtypeStruct((B, M), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, 3), jnp.int32),
+        ],
+        interpret=interpret,
+    )(scal, lo, lolen, hi, hilen, cache_lids, cache_image, pagetable, image)
+    res = _rp.ScanResult(count[:, 0], keys, klens, vals, vlens,
+                         trunc[:, 0] != 0)
+    return res, meters.sum(axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "lb_fraction",
+                                             "interpret"))
+def batched_get_fused(image, pagetable, root_lid, read_version, cache_lids,
+                      cache_image, key, klen, *, cfg,
+                      lb_fraction: float = 0.0, interpret: bool = False):
+    """Fused GET(K): ONE dispatch for the whole batch.  Returns
+    (GetResult, meters i32[3]) matching ``ref.batched_get_fused_ref``."""
+    B = key.shape[0]
+    S, IW = image.shape
+    C = cache_lids.shape[0]
+    KW, VW = cfg.key_words, cfg.val_words
+    scal = jnp.stack([root_lid.astype(jnp.int32),
+                      read_version.astype(jnp.int32)])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B,),
+        in_specs=_common_specs(KW, C, IW),
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i, s: (i, 0)),       # found
+            pl.BlockSpec((1, VW), lambda i, s: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, s: (i, 0)),       # vallen
+            pl.BlockSpec((1, 3), lambda i, s: (i, 0)),       # meters
+        ],
+    )
+    found, vals, vlens, meters = pl.pallas_call(
+        _fused_kernel(cfg, int(round(lb_fraction * 16)), "get"),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, VW), jnp.uint32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, 3), jnp.int32),
+        ],
+        interpret=interpret,
+    )(scal, key, klen, key, klen, cache_lids, cache_image, pagetable, image)
+    res = _rp.GetResult(found[:, 0] != 0, vals, vlens[:, 0])
+    return res, meters.sum(axis=0)

@@ -9,11 +9,13 @@ The default follows the runtime: TPU -> pallas, else ref.
 """
 from __future__ import annotations
 
+import collections
 import functools
 
 import jax
 
 from . import delta_scatter as _ds
+from . import fused_read as _fr
 from . import key_search as _ks
 from . import leaf_merge as _lm
 from . import paged_attention as _pa
@@ -22,6 +24,52 @@ from . import ref as _ref
 
 def default_backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+# ---------------------------------------------------------------- dispatch
+# counter: device launches per read batch, recorded at the NON-jitted shard
+# dispatch site (core/shard.py) so trace-caching can't hide repeats.  The
+# counts are the analytic launch model the latency benchmark pins (like
+# PR 6's dma/node 24 -> 1): the fused megakernels execute the whole
+# traversal in ONE pallas_call, where the reference path issues one
+# gather/merge stage per descend level plus one per scan-leaf visit (floor
+# pre-pass + forward pass) and GET adds its equality post-pass.
+READ_DISPATCHES: collections.Counter = collections.Counter()
+
+
+def read_dispatch_count(op: str, read_backend: str, cfg) -> int:
+    """Device dispatches one ``op`` ("get"/"scan") batch costs under
+    ``read_backend`` ("fused"/"reference") at this config's static
+    traversal bounds."""
+    if read_backend == "fused":
+        return 1
+    n = cfg.max_height + 2 * cfg.max_scan_leaves
+    return n + 1 if op == "get" else n
+
+
+def record_read_dispatch(op: str, read_backend: str, cfg, batches: int = 1):
+    """Meter ``batches`` read-batch dispatches (called per device call by
+    the shard layer)."""
+    READ_DISPATCHES[(op, read_backend)] += \
+        batches * read_dispatch_count(op, read_backend, cfg)
+    READ_DISPATCHES[("batches", op, read_backend)] += batches
+
+
+def reset_read_dispatches():
+    READ_DISPATCHES.clear()
+
+
+def read_dispatch_stats() -> dict:
+    """Per-(op, backend) dispatched-launch totals and per-batch averages."""
+    out = {}
+    for op in ("get", "scan"):
+        for rb in ("fused", "reference"):
+            b = READ_DISPATCHES.get(("batches", op, rb), 0)
+            d = READ_DISPATCHES.get((op, rb), 0)
+            if b:
+                out[f"{op}_{rb}"] = {"batches": b, "dispatches": d,
+                                     "per_batch": d / b}
+    return out
 
 
 def key_search(q, qlen, keys, klens, valid, backend: str | None = None,
@@ -120,6 +168,39 @@ def snapshot_multi_scatter(dsts, rows, upd, backend: str | None = None,
     return _ds.snapshot_multi_scatter(dsts, rows, upd,
                                       interpret=(backend == "interpret"),
                                       **kw)
+
+
+def batched_get_fused(snap, key, klen, *, cfg, lb_fraction: float = 0.0,
+                      backend: str | None = None):
+    """Fused device-resident GET: the whole batch traversal (descend +
+    leaf resolve + log merge + version resolution) in ONE dispatch, the
+    first ``cfg.cache_levels`` levels served from the snapshot's
+    VMEM-pinned cache tier.  ``snap`` is a packed ``TreeSnapshot`` with
+    cache fields attached.  Returns (GetResult, meters i32[3] =
+    [vmem_hits, heap_gathers, lb_routed])."""
+    backend = backend or default_backend()
+    if backend == "ref":
+        return _ref.batched_get_fused_ref(snap, key, klen, cfg=cfg,
+                                          lb_fraction=lb_fraction)
+    return _fr.batched_get_fused(
+        snap.image, snap.pagetable, snap.root_lid, snap.read_version,
+        snap.cache_lids, snap.cache_image, key, klen, cfg=cfg,
+        lb_fraction=lb_fraction, interpret=(backend == "interpret"))
+
+
+def batched_scan_fused(snap, lo, lolen, hi, hilen, *, cfg,
+                       lb_fraction: float = 0.0,
+                       backend: str | None = None):
+    """Fused device-resident SCAN — see ``batched_get_fused``.  Returns
+    (ScanResult, meters i32[3])."""
+    backend = backend or default_backend()
+    if backend == "ref":
+        return _ref.batched_scan_fused_ref(snap, lo, lolen, hi, hilen,
+                                           cfg=cfg, lb_fraction=lb_fraction)
+    return _fr.batched_scan_fused(
+        snap.image, snap.pagetable, snap.root_lid, snap.read_version,
+        snap.cache_lids, snap.cache_image, lo, lolen, hi, hilen, cfg=cfg,
+        lb_fraction=lb_fraction, interpret=(backend == "interpret"))
 
 
 def paged_attention(q, k_pages, v_pages, block_tables, seq_lens,

@@ -5,6 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import read_path as _rp
 from repro.core.keys import jax_key_cmp
 from repro.core.read_path import log_sort_positions
 
@@ -112,6 +113,33 @@ def log_replay_scatter_ref(image, rows, slots, entries, *, offs):
     same_row = rows[:, None] == rows[None, :]
     final_nlog = jnp.where(same_row, (j + 1)[None, :], 0).max(axis=1)
     return img.at[rows, offs.nlog].set(final_nlog.astype(image.dtype))
+
+
+def batched_scan_fused_ref(snap, lo, lolen, hi, hilen, *, cfg,
+                           lb_fraction: float = 0.0):
+    """Fused SCAN oracle: the whole traversal — cache-tiered descend, leaf
+    resolve, log merge, version resolution — as ONE jnp expression over the
+    snapshot's combined cache+heap image view.  Returns
+    (ScanResult, meters i32[3] = [vmem_hits, heap_gathers, lb_routed]).
+
+    Descend levels whose LID sits in the snapshot's cache tier resolve from
+    the cache rows (no pagetable/MVCC walk); the scan engine itself is the
+    reference implementation running on the combined view, so results are
+    bit-identical to ``read_path.batched_scan`` by construction."""
+    view = _rp.fused_view(snap, cfg)
+    leaf0, meters = _rp.descend_fused(snap, view, lo, lolen, cfg,
+                                      lb_fraction=lb_fraction)
+    res = _rp.scan_from_leaf(view, leaf0, lo, lolen, hi, hilen, cfg)
+    return res, meters
+
+
+def batched_get_fused_ref(snap, key, klen, *, cfg,
+                          lb_fraction: float = 0.0):
+    """Fused GET oracle: fused SCAN(K, K) + the shared equality post-pass.
+    Returns (GetResult, meters i32[3])."""
+    res, meters = batched_scan_fused_ref(snap, key, klen, key, klen,
+                                         cfg=cfg, lb_fraction=lb_fraction)
+    return _rp.get_from_scan(res, key, klen), meters
 
 
 def paged_attention_ref(q, k_pages, v_pages, block_tables, seq_lens,

@@ -76,6 +76,8 @@ def abstract_snapshot(cfg: HoneycombConfig, n_items: int, shards: int):
         pagetable=sds((S,), i32),
         root_lid=sds((), i32),
         read_version=sds((), i32),
+        cache_lids=sds((cfg.cache_slots,), i32),
+        cache_image=sds((cfg.cache_slots, layout.image_words), jnp.uint32),
     ), S
 
 
@@ -90,7 +92,9 @@ def abstract_delta(cfg: HoneycombConfig, snap: TreeSnapshot, dirty_rows: int,
         rows=sds((dirty_rows,), i32),
         image=sds((dirty_rows, snap.image.shape[1]), jnp.uint32),
         pt_lids=sds((pt_commands,), i32), pt_phys=sds((pt_commands,), i32),
-        root_lid=sds((), i32), read_version=sds((), i32))
+        root_lid=sds((), i32), read_version=sds((), i32),
+        cache_lids=(None if snap.cache_lids is None
+                    else sds(snap.cache_lids.shape, i32)))
 
 
 def delta_sync_analysis(cfg: HoneycombConfig, snap_abs: TreeSnapshot,
@@ -191,6 +195,25 @@ def live_sharded_smoke(shards: int = 4, n_items: int = 1024,
         for op in (Update(int_key(int(rng.integers(0, n_items))), b"p" * 12),
                    Get(int_key(int(rng.integers(0, n_items))))))
     svc.drain()
+    # fused read-path invariants: the default backend served through the
+    # megakernels with the cache tier resolving levels from VMEM, and is
+    # result-identical to the reference path (a cache-less snapshot is the
+    # documented reference fallback — same shard, same dispatch machinery)
+    span_per_shard = n_items // shards
+    for i, sh in enumerate(st.shards):
+        pk = [int_key(int(k)) for k in
+              rng.integers(i * span_per_shard, (i + 1) * span_per_shard, 16)]
+        snap = sh._snapshot_for_read()
+        assert sh._device_get(snap, pk) == \
+            sh._device_get(snap._replace(cache_image=None), pk), \
+            f"fused GET diverged from reference on shard {i}"
+        pr = [(pk[0], pk[1])]
+        assert sh._device_scan(snap, pr, None) == \
+            sh._device_scan(snap._replace(cache_image=None), pr, None), \
+            f"fused SCAN diverged from reference on shard {i}"
+    vmem_hits = sum(sh.cache.stats.vmem_hits for sh in st.shards)
+    heap_gathers = sum(sh.cache.stats.heap_gathers for sh in st.shards)
+    assert vmem_hits > 0, "cache tier never served a descend level"
     agg = st.sync_stats
     ps = st.pipeline_stats
     return {
@@ -205,6 +228,12 @@ def live_sharded_smoke(shards: int = 4, n_items: int = 1024,
         "dirty_shard_syncs_after_confined_burst": dirty,
         "log_wire_bytes": agg.log_wire_bytes,
         "load_imbalance": st.load_imbalance,
+        "read_path": {
+            "backend": cfg.read_backend,
+            "vmem_hits": vmem_hits,
+            "heap_gathers": heap_gathers,
+            "fused_matches_reference": True,     # asserted above
+        },
         "pipelined_epoch": {
             "per_shard_epochs": st.per_shard_epochs,
             "staged_exports": ps.staged_exports, "flips": ps.flips,
@@ -261,6 +290,21 @@ def live_replicated_smoke(shards: int = 2, replicas: int = 2,
     log_replays = sum(f.sync_stats.log_replays
                       for sh in st.shards for f in sh.followers)
     assert log_replays > 0, "no follower replayed a log payload on device"
+    # followers inherit the cache tier through the feeds (delta applies
+    # re-attach it with cfg; log replays rebuild it from the replayed
+    # image) and their fused reads match the reference fallback
+    vmem_hits = 0
+    for sh in st.shards:
+        for f in sh.followers:
+            snap = f.snapshot
+            assert snap is not None and snap.cache_image is not None, \
+                "follower lost the cache tier over the feed"
+            pk = [int_key(int(k)) for k in rng.integers(0, n_items, 8)]
+            got = sh.primary._device_get(snap, pk)
+            ref = sh.primary._device_get(snap._replace(cache_image=None), pk)
+            assert got == ref, "follower fused GET diverged from reference"
+        vmem_hits += sh.cache.stats.vmem_hits
+    assert vmem_hits > 0, "cache tier never served a descend level"
     return {
         "shards": shards, "replicas": replicas, "items": n_items,
         "layout": cfg.layout,
@@ -282,6 +326,12 @@ def live_replicated_smoke(shards: int = 2, replicas: int = 2,
             "log_replays": log_replays,
         },
         "primary_sync_bytes": st.sync_stats.bytes_synced,
+        "read_path": {
+            "backend": cfg.read_backend,
+            "vmem_hits": vmem_hits,
+            "followers_cache_resident": True,    # asserted above
+            "fused_matches_reference": True,     # asserted above
+        },
         "replica_lag_epochs": st.replica_lag_epochs,
         "replica_staleness": st.replica_staleness,
         "lagging_skips": st.lagging_skips,

@@ -253,7 +253,11 @@ def test_fused_multi_field_scatter_matches_oracle():
     want = apply_snapshot_delta(snap, delta)
     got = apply_snapshot_delta(snap, delta, backend="interpret")
     for f in want._fields:
-        assert bool(jnp.array_equal(getattr(want, f), getattr(got, f))), f
+        w, g = getattr(want, f), getattr(got, f)
+        if w is None or g is None:     # unattached cache tier (no cfg given)
+            assert w is None and g is None, f
+        else:
+            assert bool(jnp.array_equal(w, g)), f
 
 
 def test_multi_scatter_kernel_duplicate_rows():
