@@ -18,13 +18,22 @@ import numpy as np
 from repro.baselines.cpu_store import CpuOrderedStore
 from repro.core import (FeedTopology, Get, HoneycombConfig, HoneycombService,
                         HoneycombStore, Put, ReplicationConfig, Scan,
-                        ShardedHoneycombStore, uniform_int_boundaries)
+                        ShardedHoneycombStore, TelemetryConfig,
+                        uniform_int_boundaries)
 from repro.core.keys import int_key
 
 TDP_BASELINE_W = 127.0
 TDP_HONEYCOMB_W = 157.9
 
 KEY_BYTES = 8
+
+# observability wiring for the scheduled sections (core/telemetry.py):
+# every run_scheduled service carries a metrics registry whose snapshot is
+# attached to the section record; run.py --metrics raises the sample rate
+# so one sampled Perfetto trace lands next to bench_results.json.  The
+# bundle of the LAST run_scheduled call is kept for the artifact writers.
+TRACE_SAMPLE_RATE = 0.0
+LAST_TELEMETRY = None
 
 
 def zipf_sampler(n: int, theta: float = 0.99, seed: int = 0):
@@ -197,8 +206,12 @@ def run_scheduled(store, sampler, *, n_ops: int, read_frac: float,
     pipelined-vs-serial artifact: serial mode blocks on every epoch's sync
     barrier; pipelined mode overlaps the standby scatters with read
     dispatch."""
+    global LAST_TELEMETRY
     start_sync = sync_traffic(store)
-    svc = HoneycombService(store, batch_size=batch, pipeline=pipeline)
+    svc = HoneycombService(
+        store, batch_size=batch, pipeline=pipeline,
+        telemetry=TelemetryConfig(trace_sample_rate=TRACE_SAMPLE_RATE))
+    LAST_TELEMETRY = svc.telemetry
     rng = np.random.default_rng(seed)
     reads = rng.random(n_ops) < read_frac
     keys = sampler(n_ops)
@@ -226,6 +239,10 @@ def run_scheduled(store, sampler, *, n_ops: int, read_frac: float,
         "admit_s": st.admit_s, "export_s": st.export_s,
         "dispatch_s": st.dispatch_s, "lane_occupancy": st.lane_occupancy,
         "sync": {k: end[k] - start_sync[k] for k in _SYNC_DIFF_KEYS},
+        # the registry view of the same run — counters/gauges from every
+        # wired stats surface plus the latency-histogram quantiles (the
+        # run.py --metrics table reads THIS, not hand-picked fields)
+        "metrics": svc.metrics_snapshot(),
     }
 
 

@@ -24,7 +24,12 @@ fused whole-traversal megakernels with the VMEM-pinned cache tier vs the
 staged jnp reference, with dispatched-launch counts from the new meter.  ``--tiny`` shrinks every section's workload for CI
 smoke runs.  A summary
 table of every section's sync meters (log entries, wire bytes, sync bytes,
-replica amplification) prints after the sweep.
+replica amplification) prints after the sweep; ``--metrics`` adds a second
+table sourced from the telemetry REGISTRY snapshots the scheduled sections
+attach (core/telemetry.py — device-cache hit rate, image-DMA counts, sync
+stall fraction, GET latency p50/p99), raises the per-request trace sample
+rate, and writes ``experiments/metrics_snapshot.json`` plus a
+Perfetto-loadable ``experiments/bench_trace.json`` next to the results.
 
 The scheduler-driven sections run through the typed service API
 (``HoneycombService.submit``/``drain`` with first-class op messages —
@@ -40,9 +45,9 @@ import json
 import time
 from pathlib import Path
 
-from . import (bytes_model, cache_lb, cloud_storage, key_size, latency,
-               log_block, mvcc_cost, roofline, scan_size, service_smoke,
-               ycsb)
+from . import (bytes_model, cache_lb, cloud_storage, common, key_size,
+               latency, log_block, mvcc_cost, roofline, scan_size,
+               service_smoke, ycsb)
 
 SECTIONS = [
     ("service_api_smoke", service_smoke.run),
@@ -96,6 +101,64 @@ def print_sync_summary(results: dict) -> None:
               f"{dmas:>8} {feed:>12} {relay:>12} {fb:>9}")
 
 
+def _mval(metrics: dict, name: str, **labels) -> float:
+    """Sum the scalar registry samples named ``name`` (optionally filtered
+    by label equality) out of a flat ``name{k=v,...}`` snapshot."""
+    tot = 0.0
+    for k, v in metrics.items():
+        base, _, rest = k.partition("{")
+        if base != name or isinstance(v, dict):
+            continue
+        if labels:
+            ls = dict(p.split("=", 1)
+                      for p in rest.rstrip("}").split(",") if "=" in p)
+            if any(ls.get(a) != str(b) for a, b in labels.items()):
+                continue
+        tot += v
+    return tot
+
+
+def _mhist(metrics: dict, name: str) -> dict:
+    """First histogram sample named ``name`` (its quantile dict)."""
+    for k, v in metrics.items():
+        if k.partition("{")[0] == name and isinstance(v, dict):
+            return v
+    return {}
+
+
+def print_metrics_summary(results: dict) -> None:
+    """One table per --metrics run sourced from the REGISTRY snapshots the
+    scheduled sections attach (core/telemetry.py; not hand-picked stats
+    fields): device-cache hit rate, image-DMA count, the scheduler's sync
+    stall fraction and lane occupancy, and the GET latency p50/p99."""
+    rows = []
+    for section, recs in results.items():
+        if not isinstance(recs, dict):
+            continue
+        for key, rec in recs.items():
+            m = rec.get("metrics") if isinstance(rec, dict) else None
+            if not m:
+                continue
+            g = _mhist(m, "read_get_latency_seconds")
+            rows.append((f"{section}/{key}",
+                         _mval(m, "cache_device_hit_rate"),
+                         int(_mval(m, "sync_image_dma_count",
+                                   src="primary")),
+                         _mval(m, "pipeline_stall_fraction",
+                               src="scheduler"),
+                         _mval(m, "pipeline_lane_occupancy",
+                               src="scheduler"),
+                         g.get("p50", 0.0) * 1e6, g.get("p99", 0.0) * 1e6))
+    if not rows:
+        return
+    print("# --- registry metrics summary ---")
+    print(f"# {'run':<44} {'dev_hit':>7} {'img_dmas':>8} {'stall_fr':>8} "
+          f"{'lane_occ':>8} {'get_p50us':>10} {'get_p99us':>10}")
+    for name, hit, dmas, stall, occ, p50, p99 in rows:
+        print(f"# {name:<44} {hit:>7.3f} {dmas:>8} {stall:>8.3f} "
+              f"{occ:>8.3f} {p50:>10.1f} {p99:>10.1f}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("only", nargs="?", default=None,
@@ -128,6 +191,13 @@ def main() -> None:
     ap.add_argument("--layout", default="packed",
                     help="comma-separated snapshot layouts to sweep for the "
                          "layout-aware sections (e.g. packed,legacy)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print a registry metrics summary table (hit "
+                         "rates, DMA counts, stall fraction, read "
+                         "p50/p99) after the sweep, raise the trace "
+                         "sample rate, and write the last section's "
+                         "metrics snapshot + a Perfetto trace next to "
+                         "bench_results.json")
     ap.add_argument("--tiny", action="store_true",
                     help="shrink workloads to smoke-test sizes (CI)")
     ap.add_argument("--strict", action="store_true",
@@ -142,6 +212,8 @@ def main() -> None:
     layout = tuple(m for m in args.layout.split(",") if m)
     read_backend = tuple(b for b in args.read_backend.split(",") if b)
     only = tuple(t for t in (args.only or "").split(",") if t)
+    if args.metrics:
+        common.TRACE_SAMPLE_RATE = 1 / 16   # every 16th request traced
     results = {}
     for name, fn in SECTIONS:
         if only and not any(tok in name for tok in only):
@@ -177,6 +249,16 @@ def main() -> None:
     out.parent.mkdir(exist_ok=True)
     out.write_text(json.dumps(results, indent=1, default=str))
     print(f"# results -> {out}")
+    if args.metrics:
+        print_metrics_summary(results)
+        tm = common.LAST_TELEMETRY
+        if tm is not None:
+            snap = out.parent / "metrics_snapshot.json"
+            snap.write_text(json.dumps(tm.snapshot(), indent=1))
+            trace = out.parent / "bench_trace.json"
+            trace.write_text(json.dumps(tm.chrome_trace()))
+            print(f"# metrics -> {snap}  trace -> {trace} "
+                  f"({len(tm.traces())} sampled)")
     errored = [n for n, r in results.items()
                if isinstance(r, dict) and "error" in r]
     if args.strict and errored:

@@ -21,8 +21,13 @@
 #                              # replicated with the log-shipped feed
 #                              # engaged and fused-vs-reference equality
 #                              # + vmem_hits asserted) on the packed
-#                              # layout; results land in
-#                              # experiments/bench_results.json
+#                              # layout, with telemetry asserts: the
+#                              # Prometheus export parses, key meters are
+#                              # nonzero, and a sampled replicated trace
+#                              # carries the full submit->resolve span
+#                              # chain; results land in
+#                              # experiments/bench_results.json (+
+#                              # metrics_snapshot.json, bench_trace.json)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -36,7 +41,8 @@ if [[ "${1:-}" == "--smoke" ]]; then
         service_api,fig10_ycsb,fig12_latency,fig17_log_block \
         --tiny --pipeline serial,pipelined --replicas 1,2 \
         --feed log,delta --relay-depth 0,2 \
-        --layout packed,legacy --read-backend fused,reference --strict
+        --layout packed,legacy --read-backend fused,reference \
+        --metrics --strict
     # live deployment-shape smokes on the packed layout: assert the
     # one-image-DMA-per-dirty-node invariant survives the full stack,
     # and that the replicated store actually shipped (and replayed) the
@@ -61,8 +67,41 @@ assert feed["log_bytes"] > 0 and feed["wire_bytes"] > 0, feed
 assert rp["read_path"]["vmem_hits"] > 0, rp
 assert rp["read_path"]["followers_cache_resident"], rp
 assert rp["read_path"]["fused_matches_reference"], rp
+# telemetry (core/telemetry.py): the Prometheus export must PARSE and the
+# key meters of every wired stats surface must be live on the smokes
+from repro.core import parse_prometheus, prom_value
+for label, smoke in (("sharded", sh), ("replicated", rp)):
+    tele = smoke["telemetry"]
+    pv = parse_prometheus(tele["prometheus"])
+    for meter in ("hc_sync_bytes_synced", "hc_sync_image_dma_count",
+                  "hc_tree_puts", "hc_cache_vmem_hits",
+                  "hc_pipeline_flips", "hc_read_batches",
+                  "hc_read_get_latency_seconds_count"):
+        assert prom_value(pv, meter) > 0, (label, meter, tele["prometheus"])
+    assert tele["sampled_traces"] > 0, (label, tele)
+assert prom_value(parse_prometheus(rp["telemetry"]["prometheus"]),
+                  "hc_replication_log_feed_epochs") > 0, rp["telemetry"]
+# one sampled replicated pipelined trace shows the full lifecycle chain
+# with the (shard, replica, epoch, serving_version) stamps attached
+tr = rp["telemetry"]["last_trace"]
+spans = tr["spans"]
+assert spans[0] == "submit" and spans[-1] == "resolve", tr
+assert "dispatch" in spans or tr["kind"] in ("put", "update"), tr
+assert {"shard", "replica", "epoch", "serving_version"} <= set(tr["tags"]), tr
 print(json.dumps({"live_sharded": sh, "live_replicated": rp},
                  indent=1, default=str))
+EOF
+    # the smoke's --metrics artifacts exist and the trace file is
+    # Chrome-trace-shaped (CI uploads both next to bench_results.json)
+    python - <<'EOF'
+import json
+from pathlib import Path
+snap = json.loads(Path("experiments/metrics_snapshot.json").read_text())
+assert any(k.startswith("sync_") for k in snap), list(snap)[:5]
+trace = json.loads(Path("experiments/bench_trace.json").read_text())
+assert isinstance(trace.get("traceEvents"), list), trace.keys()
+print(f"metrics snapshot keys: {len(snap)}; "
+      f"trace events: {len(trace['traceEvents'])}")
 EOF
     exit 0
 fi

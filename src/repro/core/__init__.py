@@ -1,7 +1,12 @@
 """Honeycomb core: the paper's contribution as a composable JAX module."""
 from .config import (HoneycombConfig, DEFAULT_CONFIG, FeedTopology,
                      REPLICA_FEEDS, REPLICA_POLICIES, ReplicationConfig,
-                     ServiceConfig, ShardingConfig, bucket_pow2)
+                     ServiceConfig, ShardingConfig, TelemetryConfig,
+                     bucket_pow2)
+from .telemetry import (CLOCK, Clock, Histogram, MetricSample,
+                        MetricsRegistry, Span, Telemetry, Trace, Tracer,
+                        chrome_trace_events, merge_stats, parse_prometheus,
+                        prom_value)
 from .api import (Delete, Get, HoneycombService, Put, Response, Routing,
                   Scan, Ticket, Update, WIRE_ENTRY_OVERHEAD, WireDecodeError,
                   decode_wire, decode_wire_stream, wire_entry_nbytes)
@@ -39,4 +44,7 @@ __all__ = [
     "FieldSpec", "NODE_SCHEMA", "FIELD_NAMES", "NARROWED_FIELDS",
     "NodeImageLayout", "OutOfOrderScheduler", "Request",
     "InteriorCache", "SyncStats",
+    "TelemetryConfig", "Telemetry", "MetricsRegistry", "MetricSample",
+    "Histogram", "Tracer", "Trace", "Span", "Clock", "CLOCK",
+    "chrome_trace_events", "merge_stats", "parse_prometheus", "prom_value",
 ]

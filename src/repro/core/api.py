@@ -349,13 +349,23 @@ class HoneycombService:
     def __init__(self, store, cfg: "ServiceConfig | None" = None, **over):
         from .config import ServiceConfig
         from .scheduler import OutOfOrderScheduler
+        from .telemetry import Telemetry
         self.cfg = dataclasses.replace(cfg or ServiceConfig(), **over)
         self.store = store
         self.routing: Routing = store.routing()
+        # observability (core/telemetry.py): one registry per service,
+        # every stats surface the store facade exposes registered as a
+        # live collect() source, the scheduler wired for latency
+        # histograms + sampled lifecycle traces.  Disabled => None and
+        # nothing is constructed (the zero-overhead contract).
+        tcfg = self.cfg.telemetry
+        self.telemetry = (Telemetry(tcfg).wire_store(store)
+                          if tcfg.enabled else None)
         self.scheduler = OutOfOrderScheduler(
             batch_size=self.cfg.batch_size,
             cost_classes=self.cfg.cost_classes,
-            routing=self.routing, pipeline=self.cfg.pipeline)
+            routing=self.routing, pipeline=self.cfg.pipeline,
+            telemetry=self.telemetry)
         self._pending: dict[int, Ticket] = {}
 
     # ---------------------------------------------------------- submission
@@ -383,6 +393,25 @@ class HoneycombService:
     def stats(self):
         """The scheduler's per-stage pipeline meters."""
         return self.scheduler.stats
+
+    # -------------------------------------------------------- telemetry
+    #   (all None-safe: a disabled service answers with empty exports)
+    def metrics_snapshot(self) -> dict:
+        """Flat JSON-able registry snapshot (core/telemetry.py)."""
+        return self.telemetry.snapshot() if self.telemetry else {}
+
+    def prometheus(self) -> str:
+        """Prometheus text exposition of the registry."""
+        return self.telemetry.to_prometheus() if self.telemetry else ""
+
+    def traces(self):
+        """Finished sampled lifecycle traces (oldest first)."""
+        return self.telemetry.traces() if self.telemetry else []
+
+    def chrome_trace(self) -> dict:
+        """Chrome trace-event JSON of the sampled traces (Perfetto)."""
+        return (self.telemetry.chrome_trace() if self.telemetry
+                else {"traceEvents": []})
 
     @property
     def syncs(self) -> int:

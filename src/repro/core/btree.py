@@ -41,6 +41,7 @@ from .heap import (INTERIOR, LEAF, LOG_DELETE, LOG_INSERT, LOG_UPDATE, NULL,
 from .keys import key_cmp, pack_key
 from .mvcc import VersionManager
 from .pagetable import PageTable
+from .telemetry import samples_from
 
 MAX_RESTARTS = 64
 
@@ -60,6 +61,11 @@ class TreeStats:
     node_merges: int = 0
     restarts: int = 0
     grows: int = 0
+
+    def collect(self):
+        """Registry samples (core/telemetry.py collect protocol):
+        ``tree_*`` counters for the host writer's op/maintenance mix."""
+        return samples_from(self, "tree", "btree")
 
 
 @dataclasses.dataclass

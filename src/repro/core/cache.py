@@ -35,6 +35,7 @@ import numpy as np
 
 from .config import HoneycombConfig
 from .heap import INTERIOR, NULL
+from .telemetry import samples_from
 
 
 @dataclasses.dataclass
@@ -63,6 +64,12 @@ class CacheStats:
     def device_hit_rate(self) -> float:
         t = self.vmem_hits + self.heap_gathers
         return self.vmem_hits / t if t else 0.0
+
+    def collect(self):
+        """Registry samples (core/telemetry.py collect protocol):
+        ``cache_*`` counters plus the two hit-rate gauges."""
+        return samples_from(self, "cache", "cache",
+                            derived=("hit_rate", "device_hit_rate"))
 
 
 class InteriorCache:

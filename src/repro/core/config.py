@@ -189,6 +189,36 @@ class ShardingConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """Observability knobs (core/telemetry.py — the design doc lives
+    there).
+
+    ``enabled=False`` skips telemetry construction entirely: no registry,
+    no histograms, no tracer — the scheduler hot path pays only ``is
+    None`` branches, byte-identical to the pre-telemetry behaviour.
+    ``trace_sample_rate`` samples per-request lifecycle traces
+    deterministically (every ``round(1/rate)``-th request; 0 disables
+    tracing and allocates nothing); finished traces are retained in a ring
+    buffer of ``trace_capacity``.  The histogram geometry knobs pin the
+    log-bucket resolution of every latency histogram the service
+    records."""
+    enabled: bool = True
+    trace_sample_rate: float = 0.0
+    trace_capacity: int = 256
+    latency_lo: float = 1e-7         # histogram range floor (seconds)
+    latency_hi: float = 1e3          # histogram range ceiling (seconds)
+    buckets_per_decade: int = 16     # log-bucket resolution
+
+    def __post_init__(self):
+        assert 0.0 <= self.trace_sample_rate <= 1.0, (
+            "trace_sample_rate is a probability in [0, 1]")
+        assert self.trace_capacity >= 1, "trace ring needs >= 1 slot"
+        assert 0.0 < self.latency_lo < self.latency_hi, (
+            "histogram range must satisfy 0 < lo < hi")
+        assert self.buckets_per_decade >= 1
+
+
+@dataclasses.dataclass(frozen=True)
 class ServiceConfig:
     """Serving-front-end knobs for ``HoneycombService`` (core/api.py).
 
@@ -197,10 +227,12 @@ class ServiceConfig:
     expected-work buckets SCANs are split into; ``pipeline`` the epoch
     composition (``"serial"`` models the blocking sync barrier,
     ``"pipelined"`` overlaps standby staging with read dispatch — see
-    core/pipeline.py)."""
+    core/pipeline.py); ``telemetry`` the observability knobs
+    (core/telemetry.py)."""
     batch_size: int = 256
     cost_classes: tuple[int, ...] = (1, 4, 16, 64)
     pipeline: str = "serial"
+    telemetry: TelemetryConfig = TelemetryConfig()
 
     def __post_init__(self):
         assert self.batch_size >= 1, "batch_size must be >= 1"

@@ -108,3 +108,13 @@ class PipelineStats:
         share of the epoch; pipelining drives it toward zero."""
         busy = self.admit_s + self.export_s + self.dispatch_s
         return self.sync_stall_s / busy if busy > 0 else 0.0
+
+    def collect(self):
+        """Registry samples (core/telemetry.py collect protocol):
+        ``pipeline_*`` counters plus the two derived-ratio gauges.  The
+        registering layer labels which surface this is (``src="store"``
+        for the shard-side staging meters, ``src="scheduler"`` for the
+        epoch-stage meters)."""
+        from .telemetry import samples_from
+        return samples_from(self, "pipeline", "pipeline",
+                            derived=("lane_occupancy", "stall_fraction"))

@@ -91,7 +91,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
 
 import jax
 import jax.numpy as jnp
@@ -104,8 +103,9 @@ from .read_path import NODE_FIELDS, TreeSnapshot, attach_cache_image
 from .schema import NodeImageLayout
 from .shard import (LogPayload, StagedSync, StoreShard, SyncStats,
                     _DELTA_BACKEND, _jit_apply_delta)
+from .telemetry import CLOCK, merge_stats, samples_from
 
-_now = time.perf_counter
+_now = CLOCK            # THE injectable monotonic clock (core/telemetry.py)
 
 # wire op kind -> heap log op code (the decode half of the feed)
 _LOG_CODES = {"put": LOG_INSERT, "update": LOG_UPDATE, "delete": LOG_DELETE}
@@ -149,6 +149,11 @@ class FeedStats:
     full_feed_epochs: int = 0     # full-publish stagings
     full_catchups: int = 0        # out-of-sync followers refed a full copy
     catchup_bytes: int = 0        # bytes those full catch-ups moved
+
+    def collect(self):
+        """Registry samples (core/telemetry.py collect protocol):
+        ``replication_*`` counters for every feed-transport meter."""
+        return samples_from(self, "replication", "replica")
 
 
 def _snapshot_nbytes(snap) -> int:
@@ -575,9 +580,8 @@ class ReplicaGroup:
     def replication_stats(self) -> SyncStats:
         """Aggregate follower SyncStats — the replication amplification the
         delta feed generated on top of the primary's own sync traffic."""
-        from .router import aggregate_stats
-        return aggregate_stats((f.sync_stats for f in self.followers),
-                               SyncStats)
+        return merge_stats((f.sync_stats for f in self.followers),
+                           SyncStats)
 
     @property
     def replication_bytes(self) -> int:

@@ -45,7 +45,6 @@ from __future__ import annotations
 
 import bisect
 import contextlib
-import dataclasses
 from typing import Sequence
 
 from .api import Routing
@@ -55,6 +54,7 @@ from .keys import int_key
 from .pipeline import PipelineStats
 from .replica import ReplicaGroup
 from .shard import StoreShard, SyncStats
+from .telemetry import merge_stats
 
 
 def uniform_int_boundaries(n_items: int, shards: int,
@@ -65,24 +65,10 @@ def uniform_int_boundaries(n_items: int, shards: int,
                  for i in range(1, shards))
 
 
-def aggregate_stats(parts, factory):
-    """Merge per-shard / per-replica stat objects into one ``factory()``.
-
-    THE aggregation helper for both the sync path (``SyncStats``,
-    ``PipelineStats`` — merged via their ``merge``) and the dispatch path
-    (``TreeStats`` — plain field sums); ``ReplicaGroup.replication_stats``
-    reuses it for follower aggregation, so every layer aggregates the same
-    way."""
-    agg = factory()
-    if hasattr(agg, "merge"):
-        for p in parts:
-            agg.merge(p)
-    else:
-        for p in parts:
-            for f in dataclasses.fields(agg):
-                setattr(agg, f.name,
-                        getattr(agg, f.name) + getattr(p, f.name))
-    return agg
+# THE aggregation helper now lives beside the collect() protocol it feeds
+# (core/telemetry.py merge_stats); this name remains as the historical
+# import path — every layer still aggregates the same way.
+aggregate_stats = merge_stats
 
 
 class ShardedHoneycombStore:
@@ -340,6 +326,16 @@ class ShardedHoneycombStore:
     @property
     def per_shard_stats(self) -> list[TreeStats]:
         return [sh.stats for sh in self.shards]
+
+    @property
+    def cache_stats(self):
+        """Aggregate interior-cache meters across shards (a replicated
+        shard's group reaches its primary's cache through the
+        fallthrough; follower-served fused batches are already folded in
+        by the dispatching shard — see ``StoreShard._note_read_meters``)."""
+        from .cache import CacheStats
+        return aggregate_stats((sh.cache_stats for sh in self.shards),
+                               CacheStats)
 
     # ------------------------------------------------ replication meters
     @property

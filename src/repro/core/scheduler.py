@@ -60,7 +60,6 @@ shim that unwraps responses to bare values.
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import defaultdict
 from typing import Any, Iterable, Sequence
 
@@ -69,8 +68,9 @@ import jax
 from .api import (NOT_FOUND, OK, OPS_BY_KIND, WRITE_KINDS, Op, Response,
                   Routing, Scan)
 from .pipeline import PIPELINE_MODES, PipelineStats
+from .telemetry import CLOCK
 
-_now = time.perf_counter
+_now = CLOCK            # THE injectable monotonic clock (core/telemetry.py)
 
 
 @dataclasses.dataclass
@@ -113,13 +113,37 @@ class OutOfOrderScheduler:
     def __init__(self, batch_size: int = 256,
                  cost_classes: Sequence[int] = (1, 4, 16, 64),
                  routing: Routing | None = None,
-                 pipeline: str = "serial"):
+                 pipeline: str = "serial",
+                 telemetry=None):
         assert pipeline in PIPELINE_MODES, (
             f"unknown pipeline mode {pipeline!r} (one of {PIPELINE_MODES})")
         self.batch_size = batch_size
         self.cost_classes = tuple(sorted(cost_classes))
         self.pipeline = pipeline
         self.stats = PipelineStats()
+        # observability (core/telemetry.py): when wired, the scheduler
+        # registers its stage meters, records per-request device-latency
+        # histograms at dispatch, and drives the sampled lifecycle tracer
+        # (submit -> admit -> export_stage -> flip -> dispatch -> resolve).
+        # telemetry=None (or disabled) leaves only `is None` branches on
+        # the hot path — behaviour is byte-identical to pre-telemetry.
+        self.telemetry = (telemetry if telemetry is not None
+                          and telemetry.enabled else None)
+        self._tracer = (self.telemetry.tracer
+                        if self.telemetry is not None else None)
+        if self.telemetry is not None:
+            self.telemetry.wire_scheduler(self)
+            self._lat_hist = {
+                "get": self.telemetry.histogram("read_get_latency_seconds",
+                                                layer="scheduler"),
+                "scan": self.telemetry.histogram("read_scan_latency_seconds",
+                                                 layer="scheduler"),
+            }
+            self._req_hist = self.telemetry.histogram(
+                "request_latency_seconds", layer="scheduler")
+        else:
+            self._lat_hist = None
+            self._req_hist = None
         # store-provided wiring (store.routing() — core/api.py): key ->
         # owning shard, the replica read-spreading pick, and the response
         # stamps.  None routes everything to shard 0 and never forwards a
@@ -166,6 +190,9 @@ class OutOfOrderScheduler:
                 r.replica = self._replica_of(r.shard)
             self._buckets[(r.shard, r.replica, op.KIND,
                            self._cost_class(r))].append(r)
+        if self._tracer is not None:
+            self._tracer.begin(rid, op.KIND, shard=r.shard,
+                               replica=r.replica)
         return rid
 
     def submit(self, kind: str, key: bytes, hi: bytes = b"",
@@ -203,9 +230,15 @@ class OutOfOrderScheduler:
         t0 = _now()
         out: dict[int, Response] = {}
         rt = self._resolve_routing(store) if self._writes else None
+        tr = self._tracer
         with store.deferred_sync():
             for r in self._writes:
-                r.op.apply(store)
+                if tr is not None and tr.is_live(r.rid):
+                    a0 = _now()
+                    r.op.apply(store)
+                    tr.span(r.rid, "admit", a0, _now(), shard=r.shard)
+                else:
+                    r.op.apply(store)
                 out[r.rid] = Response(
                     status=OK, shard=r.shard,
                     serving_version=(rt.live_version(r.shard) if rt else 0))
@@ -232,14 +265,25 @@ class OutOfOrderScheduler:
         t0 = _now()
         if self.pipeline == "serial":
             snaps = store.export_snapshot()
+            t_mid = _now()
             jax.block_until_ready(snaps)
         else:
             store.begin_export()
+            t_mid = _now()
             store.flip()
-        dt = _now() - t0
+        t1 = _now()
+        dt = t1 - t0
         self.stats.sync_stall_s += dt   # no reads dispatched yet this epoch
         self.stats.export_s += dt
         self.syncs += store.sync_stats.snapshots - before
+        if self._tracer is not None and self._tracer.live_count:
+            # the export covers the whole epoch, so attach both stage
+            # spans to every in-flight trace.  Serial: export_stage is
+            # the staging+publish, flip the modeled blocking barrier
+            # (block_until_ready); pipelined: export_stage stages the
+            # standby, flip is the atomic per-shard publish.
+            self._tracer.span_all("export_stage", t0, t_mid)
+            self._tracer.span_all("flip", t_mid, t1)
 
     def stage_dispatch(self, store, flush: bool = True
                        ) -> dict[int, Response]:
@@ -257,6 +301,7 @@ class OutOfOrderScheduler:
         lanes0, padded0 = ps.dispatched_lanes, ps.padded_lanes
         rt = self._resolve_routing(store)
         out: dict[int, Response] = {}
+        tm, tr = self.telemetry, self._tracer
         for kind, batch in self.ready_batches(flush=flush):
             self.dispatched_batches += 1
             self.dispatched_requests += len(batch)
@@ -265,12 +310,24 @@ class OutOfOrderScheduler:
             # read-spreading policy is wired (plain stores take no replica)
             kw = ({"replica": batch[0].replica}
                   if self._replica_of is not None else {})
+            b0 = _now() if tm is not None else 0.0
             if kind == "get":
                 res = store.get_batch([r.key for r in batch], **kw)
             else:
                 res = store.scan_batch([(r.key, r.hi) for r in batch], **kw)
             served, rv = (rt.report(shard) if rt is not None
                           else (batch[0].replica, 0))
+            if tm is not None:
+                b1 = _now()
+                # spread the batch's device time over its requests: one
+                # weighted record per batch keeps the histogram O(1)
+                self._lat_hist[kind].record((b1 - b0) / len(batch),
+                                            n=len(batch))
+                if tr is not None and tr.live_count:
+                    for r in batch:
+                        if tr.is_live(r.rid):
+                            tr.span(r.rid, "dispatch", b0, b1, shard=shard,
+                                    replica=served, serving_version=rv)
             for r, v in zip(batch, res):
                 if kind == "get":
                     out[r.rid] = Response(
@@ -298,7 +355,29 @@ class OutOfOrderScheduler:
             self.stage_export(store)
         out.update(self.stage_dispatch(store, flush=flush))
         self.stats.runs += 1
+        if self._tracer is not None and self._tracer.live_count:
+            self._finish_traces(store, out)
         return out
+
+    def _finish_traces(self, store,
+                       out: dict[int, Response]) -> None:
+        """Resolve every live trace whose response landed this epoch:
+        stamp it with the response's (shard, replica, serving_version)
+        plus the serving shard's snapshot epoch, append the resolve
+        instant, and record the submit->resolve request latency."""
+        tr = self._tracer
+        epochs = getattr(store, "per_shard_epochs", None)
+        for rid in tr.live_rids():
+            resp = out.get(rid)
+            if resp is None:
+                continue        # not resolved this epoch (flush=False)
+            epoch = (epochs[resp.shard] if epochs is not None
+                     else getattr(store, "epoch", 0))
+            t = tr.finish(rid, shard=resp.shard, replica=resp.replica,
+                          serving_version=resp.serving_version,
+                          epoch=epoch, status=resp.status)
+            if t is not None:
+                self._req_hist.record(max(t.t1 - t.t0, 0.0))
 
     def run(self, store, flush: bool = True) -> dict[int, Any]:
         """Legacy shim over ``run_ops``: same epoch, responses unwrapped to

@@ -42,7 +42,6 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import functools
-import time
 from typing import Callable, Sequence
 
 import jax
@@ -61,6 +60,7 @@ from .read_path import (NODE_FIELDS, GetResult, LegacySnapshotDelta,
                         TreeSnapshot, apply_snapshot_delta,
                         attach_cache_image, batched_get, batched_scan)
 from .schema import NARROWED_FIELDS, NodeImageLayout
+from .telemetry import CLOCK, samples_from
 from repro.kernels import ops as kernel_ops
 
 # jit the accelerator entry points once per (config, snapshot-shape): the
@@ -88,7 +88,7 @@ _jit_apply_delta = jax.jit(apply_snapshot_delta,
 # — derived from the one layout schema, not hand-kept
 _I32_FIELDS = NARROWED_FIELDS
 
-_now = time.perf_counter
+_now = CLOCK            # THE injectable monotonic clock (core/telemetry.py)
 
 
 @dataclasses.dataclass
@@ -124,6 +124,12 @@ class SyncStats:
             else:
                 setattr(self, f.name,
                         getattr(self, f.name) + getattr(other, f.name))
+
+    def collect(self):
+        """Registry samples (core/telemetry.py collect protocol):
+        ``sync_*`` counters, ``sync_delta_fraction`` as a gauge."""
+        return samples_from(self, "sync", "shard",
+                            gauges=("delta_fraction",))
 
 
 @dataclasses.dataclass
@@ -756,3 +762,11 @@ class StoreShard:
     @property
     def stats(self):
         return self.tree.stats
+
+    @property
+    def cache_stats(self):
+        """The interior cache's meters (Section 5 metadata-table probes
+        plus the fused read path's vmem/heap split) — named so the facade
+        family shares one accessor (telemetry wiring, router aggregation;
+        a ``ReplicaGroup`` reaches it through the primary fallthrough)."""
+        return self.cache.stats

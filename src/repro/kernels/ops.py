@@ -72,6 +72,23 @@ def read_dispatch_stats() -> dict:
     return out
 
 
+def collect() -> list:
+    """Telemetry source for the launch meter (core/telemetry.py collect
+    protocol).  Returns plain ``(name, kind, value, labels)`` tuples —
+    kernels must not import repro.core (core imports kernels), so the
+    registry normalizes the dependency-free form."""
+    out = []
+    for op in ("get", "scan"):
+        for rb in ("fused", "reference"):
+            b = READ_DISPATCHES.get(("batches", op, rb), 0)
+            d = READ_DISPATCHES.get((op, rb), 0)
+            if b or d:
+                labels = {"layer": "kernel", "op": op, "backend": rb}
+                out.append(("read_dispatches", "counter", d, labels))
+                out.append(("read_batches", "counter", b, labels))
+    return out
+
+
 def key_search(q, qlen, keys, klens, valid, backend: str | None = None,
                **kw):
     backend = backend or default_backend()

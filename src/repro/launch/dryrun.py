@@ -68,7 +68,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     shape = shape_by_name(shape_name)
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.devices.size
-    t0 = time.time()
+    t0 = time.perf_counter()    # monotonic: compile_s is an interval
     # full-depth compile: the dry-run proof + memory analysis
     mem, cost_full, hlo = _compile(cfg, shape, mesh, policy, moe_impl,
                                    grad_accum=grad_accum)
@@ -100,7 +100,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     else:
         cost = cost_full
         coll = hla.collective_bytes(hlo)
-    t1 = time.time()
+    t1 = time.perf_counter()
 
     mf = hla.model_flops_per_step(cfg, shape) / n_chips
     rl = hla.roofline(cost, coll, mf)

@@ -47,8 +47,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core import (Get, HoneycombConfig, HoneycombService, Put,
-                        ReplicationConfig, ShardedHoneycombStore, Update,
-                        uniform_int_boundaries)
+                        ReplicationConfig, ShardedHoneycombStore,
+                        TelemetryConfig, Update, uniform_int_boundaries)
 from repro.core.keys import int_key
 from repro.core.read_path import (SnapshotDelta, TreeSnapshot,
                                   apply_snapshot_delta, batched_get,
@@ -159,6 +159,24 @@ def pipeline_occupancy_model(cfg: HoneycombConfig, snap_abs: TreeSnapshot,
     }
 
 
+def _telemetry_report(svc: HoneycombService) -> dict:
+    """The smoke's observability artifact (core/telemetry.py): the full
+    registry snapshot, the Prometheus exposition (verify.sh parses it and
+    asserts key meters), the Chrome trace-event JSON (written next to the
+    results by ``main`` — Perfetto-loadable), and the last sampled
+    trace's span chain + stamps for the lifecycle assertions."""
+    traces = svc.traces()
+    last = traces[-1] if traces else None
+    return {
+        "snapshot": svc.metrics_snapshot(),
+        "prometheus": svc.prometheus(),
+        "chrome_trace": svc.chrome_trace(),
+        "sampled_traces": len(traces),
+        "last_trace": ({"kind": last.kind, "spans": last.span_names(),
+                        "tags": last.tags} if last else None),
+    }
+
+
 def live_sharded_smoke(shards: int = 4, n_items: int = 1024,
                        batch: int = 64) -> dict:
     """Drive a small LIVE ShardedHoneycombStore through the dry-run's
@@ -189,7 +207,9 @@ def live_sharded_smoke(shards: int = 4, n_items: int = 1024,
     # from the store — core/api.py): staged standby scatters + independent
     # per-shard flips + immediate read dispatch (measured twin of
     # pipeline_occupancy_model)
-    svc = HoneycombService(st, batch_size=batch, pipeline="pipelined")
+    svc = HoneycombService(
+        st, batch_size=batch, pipeline="pipelined",
+        telemetry=TelemetryConfig(trace_sample_rate=0.25))
     svc.submit_many(
         op for k in range(batch)
         for op in (Update(int_key(int(rng.integers(0, n_items))), b"p" * 12),
@@ -240,6 +260,7 @@ def live_sharded_smoke(shards: int = 4, n_items: int = 1024,
             "sync_stall_s": svc.stats.sync_stall_s,
             "lane_occupancy": svc.stats.lane_occupancy,
         },
+        "telemetry": _telemetry_report(svc),
     }
 
 
@@ -264,7 +285,9 @@ def live_replicated_smoke(shards: int = 2, replicas: int = 2,
     for i in rng.permutation(n_items):
         st.put(int_key(int(i)), b"v" * 12)
     st.export_snapshot()                 # primaries + followers resident
-    svc = HoneycombService(st, batch_size=batch // 2, pipeline="pipelined")
+    svc = HoneycombService(
+        st, batch_size=batch // 2, pipeline="pipelined",
+        telemetry=TelemetryConfig(trace_sample_rate=0.25))
     tickets = svc.submit_many(
         op for k in range(batch)
         for op in (Update(int_key(int(rng.integers(0, n_items))), b"r" * 12),
@@ -335,6 +358,7 @@ def live_replicated_smoke(shards: int = 2, replicas: int = 2,
         "replica_lag_epochs": st.replica_lag_epochs,
         "replica_staleness": st.replica_staleness,
         "lagging_skips": st.lagging_skips,
+        "telemetry": _telemetry_report(svc),
     }
 
 
@@ -399,10 +423,22 @@ def main(batch_per_shard: int = 512, n_items: int = 128_000_000):
         "live_sharded_store": live_sharded_smoke(),
         "live_replicated_store": live_replicated_smoke(),
     }
+    # the observability artifacts land NEXT TO the results (CI uploads
+    # them): one registry metrics snapshot per live smoke, plus the
+    # replicated smoke's sampled lifecycle traces as a Perfetto-loadable
+    # Chrome trace-event file.  The bulky exports are popped out of the
+    # main results JSON; the parsed/asserted surfaces stay inline.
+    exp = Path("experiments")
+    exp.mkdir(exist_ok=True)
+    metrics = {k: out[k]["telemetry"]["snapshot"]
+               for k in ("live_sharded_store", "live_replicated_store")}
+    (exp / "store_dryrun_metrics.json").write_text(
+        json.dumps(metrics, indent=1))
+    trace = out["live_replicated_store"]["telemetry"].pop("chrome_trace")
+    out["live_sharded_store"]["telemetry"].pop("chrome_trace")
+    (exp / "store_dryrun_trace.json").write_text(json.dumps(trace))
     print(json.dumps(out, indent=1))
-    p = Path("experiments/store_dryrun.json")
-    p.parent.mkdir(exist_ok=True)
-    p.write_text(json.dumps(out, indent=1))
+    (exp / "store_dryrun.json").write_text(json.dumps(out, indent=1))
     return out
 
 
