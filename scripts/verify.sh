@@ -1,8 +1,24 @@
 #!/usr/bin/env bash
 # Tier-1 verification gate (fast, deterministic).
 #
-#   scripts/verify.sh          # fast gate: everything not marked slow
-#   scripts/verify.sh --all    # full suite, including slow tests
+#   scripts/verify.sh           # fast gate: everything not marked slow
+#   scripts/verify.sh --all     # full suite, including slow tests
+#   scripts/verify.sh --analyze # honeylint static analysis + EpochSan:
+#                               # the repo-specific AST lint pass
+#                               # (raw-clock / aliased-publish /
+#                               # magic-offset / stats-collect /
+#                               # bare-except rules + the pinned
+#                               # NODE_SCHEMA/wire-codec golden), the
+#                               # kernel jaxpr checker over every Pallas
+#                               # entry point (f64 / callbacks /
+#                               # input_output_aliases on in-place
+#                               # scatters / single-dispatch fusion /
+#                               # VMEM block budget), both merged into
+#                               # experiments/analysis_report.json, then
+#                               # the epoch/replica test surface re-run
+#                               # under HONEYCOMB_EPOCHSAN=1 (runtime
+#                               # sanitizer at the staging/flip/dispatch/
+#                               # GC seams); nonzero on any finding
 #   scripts/verify.sh --smoke  # benchmark smoke only (tiny sizes): the
 #                              # HoneycombService smoke (typed op messages,
 #                              # submit_many + drain over a replicated
@@ -35,6 +51,18 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 if [[ "${1:-}" == "--all" ]]; then
     exec python -m pytest -x -q
+fi
+if [[ "${1:-}" == "--analyze" ]]; then
+    # static half: lint rules + schema golden + kernel jaxpr checks;
+    # exits nonzero on any unbaselined finding
+    python -m repro.analysis --json experiments/analysis_report.json
+    # runtime half: the epoch/snapshot protocol surface under EpochSan
+    # (strict mode — the first violated seam invariant raises there)
+    HONEYCOMB_EPOCHSAN=1 python -m pytest -x -q -m "not slow" \
+        tests/test_analysis.py tests/test_pipeline_engine.py \
+        tests/test_replica.py tests/test_delta_sync.py \
+        tests/test_scheduler_cache.py tests/test_log_feed.py
+    exit 0
 fi
 if [[ "${1:-}" == "--smoke" ]]; then
     python -m benchmarks.run \

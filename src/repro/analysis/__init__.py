@@ -1,0 +1,70 @@
+"""honeylint — Honeycomb's repo-specific static analysis + sanitizers.
+
+Three parts, one gate (``scripts/verify.sh --analyze``, CI job
+``analyze``):
+
+  * ``analysis/lint.py``         — AST lint pass + golden schema hash
+  * ``analysis/kernel_check.py`` — jaxpr audit of every Pallas entry point
+  * ``analysis/epochsan.py``     — env-gated runtime sanitizer
+    (``HONEYCOMB_EPOCHSAN=1``) for the epoch/snapshot protocol
+
+Every rule encodes a bug class this repo has already hit (or a
+neighbouring repo class the protocol-verification literature insists on
+checking mechanically).  Rule reference:
+
+====================== ============================================= =====
+rule id                bug class it encodes                          origin
+====================== ============================================= =====
+no-raw-clock           raw time.time()/perf_counter() bypassing the  PR 9
+                       injectable telemetry.CLOCK (unfreezable
+                       timings, untestable timers)
+no-aliased-publish     jnp.asarray() aliasing the live host heap in  PR 1
+                       a snapshot publish (zero-copy on CPU: the
+                       published epoch mutates under readers — the
+                       PR 1 flake)
+no-magic-image-offsets integer-literal word offsets into the packed  PR 8
+                       node image instead of NodeImageLayout /
+                       log_replay_offsets() (silently desynced
+                       kernels when NODE_SCHEMA changes)
+stats-must-collect     *Stats dataclass without collect(): meters    PR 9
+                       invisible to the telemetry registry and the
+                       Prometheus/JSON exporters
+no-bare-except         bare/over-broad except swallowing protocol    PR 10
+                       violations (incl. EpochSan assertions)
+schema-golden-drift    NODE_SCHEMA / wire-codec layout drift without PR 4/7
+                       re-pinning the golden (device image + replica
+                       feed are cross-version contracts)
+kernel-no-f64          float64 values inside a device kernel         PR 8
+kernel-no-callback     host callbacks inside a kernel dispatch       PR 8
+kernel-inplace-alias   in-place scatter without declared             PR 4
+                       input_output_aliases (full image copy per
+                       sync)
+kernel-single-dispatch fused read path lowering to more than one     PR 8
+                       pallas_call (single-launch contract)
+kernel-vmem-budget     per-kernel VMEM block footprint over budget   PR 8
+standby-read           device batch reading an UNFLIPPED standby     PR 6
+                       snapshot (EpochSan)
+pinned-epoch-gc        GC reclaiming buffers a pinned accelerator/   PR 6
+                       CPU epoch still needs (EpochSan)
+follower-freshness     follower dispatch below the primary's         PR 7
+                       serving read version (EpochSan)
+stale-cache-rows       staged snapshot shipping cache rows not       PR 8
+                       refreshed since a PageTable remap (EpochSan)
+unflipped-standby-     scheduler stage_export leaving a staged       PR 6
+after-export           standby unpublished (EpochSan)
+====================== ============================================= =====
+
+Import is deliberately lazy: ``repro.core`` modules import
+``repro.analysis.epochsan`` for seam hooks, so this package must load
+without jax or repro.core on the path.
+"""
+from __future__ import annotations
+
+__all__ = ["lint", "kernel_check", "epochsan", "runner"]
+
+
+def __getattr__(name):
+    if name in __all__:
+        import importlib
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(name)

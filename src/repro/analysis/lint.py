@@ -1,0 +1,396 @@
+"""honeylint — repo-specific AST lint pass.
+
+Each rule encodes a bug class this repo has already paid for at runtime
+(the table in ``analysis/__init__`` maps rule ids to the originating
+PR).  The pass is pure ``ast`` — no third-party linter — plus one
+runtime rule (``schema-golden-drift``) that imports the schema/codec
+modules and fingerprints their layout against a pinned golden.
+
+Suppressions
+============
+
+Inline, on the offending line or the line above::
+
+    t0 = time.perf_counter()  # honeylint: disable=no-raw-clock -- reason
+
+Baseline (``analysis/baseline.json``): a list of entries
+
+    {"rule": "...", "path": "src/...", "reason": "why this is justified"}
+
+matching every finding of that rule in that file.  The baseline is for
+debt the rule post-dates; new code suppresses inline with a reason.
+
+CLI::
+
+    python -m repro.analysis.lint [--baseline PATH] [--json OUT] [ROOT...]
+    python -m repro.analysis.lint --pin-golden   # re-pin after schema bumps
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import json
+import re
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[3]
+DEFAULT_ROOTS = ("src/repro",)
+BASELINE_PATH = Path(__file__).with_name("baseline.json")
+GOLDEN_PATH = Path(__file__).with_name("golden_schema.json")
+
+# the one module allowed to touch the raw clock (it OWNS telemetry.CLOCK)
+CLOCK_OWNER = "core/telemetry.py"
+RAW_CLOCK_ATTRS = {"time", "perf_counter", "perf_counter_ns",
+                   "monotonic", "monotonic_ns"}
+
+# snapshot-publish surfaces the aliasing rule patrols, and the function
+# name shapes that mark a publish path inside them
+PUBLISH_FILES = ("core/shard.py", "core/replica.py", "core/read_path.py")
+PUBLISH_FN = re.compile(r"publish|stage|export|flip|snapshot")
+
+# Pallas ref names the magic-offset rule treats as packed-image handles
+IMAGE_REF = re.compile(r"(^|_)(img|image|out|dst|node)_?ref$|^image$|^img$")
+# names whose attributes mark a layout-derived index expression
+OFFSET_SOURCES = {"offs", "off", "offsets", "layout", "slot", "cfg", "self"}
+MAGIC_MIN = 8   # literals below this are lane/step arithmetic, not offsets
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*honeylint:\s*disable=([a-z0-9_,-]+)(?:\s*--\s*(.*))?")
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    path: str           # repo-relative
+    line: int
+    message: str
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def __str__(self):
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _suppressions(source: str) -> dict[int, set[str]]:
+    """line number -> rule ids disabled there (a directive also covers
+    the NEXT line, so it can sit above long statements)."""
+    out: dict[int, set[str]] = {}
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = _SUPPRESS_RE.search(text)
+        if m:
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            out.setdefault(i, set()).update(rules)
+            out.setdefault(i + 1, set()).update(rules)
+    return out
+
+
+# ------------------------------------------------------------ rule helpers
+def _is_raw_clock(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Attribute)
+            and node.attr in RAW_CLOCK_ATTRS
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "time")
+
+
+def _names_in(node: ast.AST):
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            yield n.id
+        elif isinstance(n, ast.Attribute):
+            base = n
+            while isinstance(base, ast.Attribute):
+                base = base.value
+            if isinstance(base, ast.Name):
+                yield base.id
+
+
+def _int_literals(node: ast.AST):
+    for n in ast.walk(node):
+        if isinstance(n, ast.Constant) and isinstance(n.value, int) \
+                and not isinstance(n.value, bool):
+            yield n
+
+
+def _broad_handler(h: ast.ExceptHandler) -> bool:
+    t = h.type
+    if t is None:
+        return True
+    names = [t] if not isinstance(t, ast.Tuple) else list(t.elts)
+    return any(isinstance(n, ast.Name)
+               and n.id in ("Exception", "BaseException") for n in names)
+
+
+class _FileLinter(ast.NodeVisitor):
+    """One pass over one module; accumulates findings for all AST rules."""
+
+    def __init__(self, rel: str, source: str):
+        self.rel = rel
+        self.findings: list[Finding] = []
+        self._publish_depth = 0
+        # per-function map of local names bound to aliasing expressions
+        # (attribute chains / sliced views of live host arrays)
+        self._alias_stack: list[set[str]] = []
+        self.in_publish_file = any(self.rel.endswith(p)
+                                   for p in PUBLISH_FILES)
+        self.in_kernels = "/kernels/" in self.rel
+        self.is_clock_owner = self.rel.endswith(CLOCK_OWNER)
+
+    def emit(self, rule: str, node: ast.AST, message: str):
+        self.findings.append(Finding(rule, self.rel,
+                                     getattr(node, "lineno", 1), message))
+
+    # ------------------------------------------------------- no-raw-clock
+    def visit_Call(self, node: ast.Call):
+        if not self.is_clock_owner and _is_raw_clock(node.func):
+            self.emit(
+                "no-raw-clock", node,
+                f"time.{node.func.attr}() bypasses telemetry.CLOCK — the "
+                f"one injectable clock (freeze/advance in tests); import "
+                f"CLOCK from repro.core.telemetry")
+        if self._publish_depth and self._is_jnp_asarray(node):
+            arg = node.args[0] if node.args else None
+            if arg is not None and self._aliases_host(arg):
+                self.emit(
+                    "no-aliased-publish", node,
+                    "jnp.asarray() of a live host array inside a snapshot "
+                    "publish path: zero-copy on the CPU backend aliases the "
+                    "mutable heap (the PR 1 flake) — copy first "
+                    "(np.asarray(...).copy() / .astype(...))")
+        self.generic_visit(node)
+
+    @staticmethod
+    def _is_jnp_asarray(node: ast.Call) -> bool:
+        f = node.func
+        return (isinstance(f, ast.Attribute) and f.attr == "asarray"
+                and isinstance(f.value, ast.Name)
+                and f.value.id in ("jnp", "jax_numpy"))
+
+    def _aliases_host(self, expr: ast.AST) -> bool:
+        """Could ``expr`` be a view of a live host array?  Attribute
+        chains (``h.ntype``), ``getattr(...)`` and slice subscripts alias;
+        calls produce fresh buffers; local names inherit what they were
+        bound to (one-pass forward dataflow per function)."""
+        if isinstance(expr, ast.Attribute):
+            return True
+        if isinstance(expr, ast.Call):
+            return (isinstance(expr.func, ast.Name)
+                    and expr.func.id == "getattr")
+        if isinstance(expr, ast.Subscript):
+            return any(isinstance(n, ast.Slice) for n in ast.walk(expr.slice))
+        if isinstance(expr, ast.Name) and self._alias_stack:
+            return expr.id in self._alias_stack[-1]
+        return False
+
+    def visit_Assign(self, node: ast.Assign):
+        if self._alias_stack:
+            aliases = self._alias_stack[-1]
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    if self._aliases_host(node.value):
+                        aliases.add(t.id)
+                    else:
+                        aliases.discard(t.id)
+        self.generic_visit(node)
+
+    # --------------------------------------------------- no-bare-except
+    def visit_ExceptHandler(self, node: ast.ExceptHandler):
+        if _broad_handler(node):
+            what = "bare except" if node.type is None else "except Exception"
+            self.emit(
+                "no-bare-except", node,
+                f"{what} swallows protocol violations (including EpochSan "
+                f"assertions) — name the exception types this handler "
+                f"actually recovers from")
+        self.generic_visit(node)
+
+    # ------------------------------------------- publish-path bookkeeping
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        is_pub = self.in_publish_file and bool(PUBLISH_FN.search(node.name))
+        self._publish_depth += is_pub
+        self._alias_stack.append(set())
+        self.generic_visit(node)
+        self._alias_stack.pop()
+        self._publish_depth -= is_pub
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    # -------------------------------------------- no-magic-image-offsets
+    def visit_Subscript(self, node: ast.Subscript):
+        if self.in_kernels and isinstance(node.value, ast.Name) \
+                and IMAGE_REF.search(node.value.id):
+            self._check_index(node, node.slice)
+        self.generic_visit(node)
+
+    def _check_index(self, node: ast.AST, index: ast.AST):
+        bad = [c for c in _int_literals(index) if c.value >= MAGIC_MIN]
+        if bad and not (set(_names_in(index)) & OFFSET_SOURCES):
+            self.emit(
+                "no-magic-image-offsets", bad[0],
+                f"integer literal {bad[0].value} used as a packed-image "
+                f"offset: kernel indices must derive from NodeImageLayout "
+                f"offsets / log_replay_offsets(), which re-layout when "
+                f"NODE_SCHEMA changes")
+
+    # ------------------------------------------------- stats-must-collect
+    def visit_ClassDef(self, node: ast.ClassDef):
+        is_dc = any("dataclass" in ast.dump(d) for d in node.decorator_list)
+        if is_dc and node.name.endswith("Stats"):
+            methods = {n.name for n in node.body
+                       if isinstance(n, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef))}
+            if "collect" not in methods:
+                self.emit(
+                    "stats-must-collect", node,
+                    f"{node.name} is a *Stats dataclass without collect(): "
+                    f"every stats surface must speak the telemetry registry "
+                    f"protocol (core/telemetry.samples_from) so its meters "
+                    f"export")
+        self.generic_visit(node)
+
+
+# --------------------------------------------------------- golden schema
+def schema_fingerprint() -> dict:
+    """Canonical description of the device-visible layouts: the packed
+    node image (NODE_SCHEMA -> NodeImageLayout offsets at the default
+    geometry) and the op wire codec (core/api.py).  Any drift here
+    changes what crosses the bus / what followers replay — the golden
+    must be re-pinned deliberately (``--pin-golden``), never silently."""
+    from repro.core import api, schema
+    from repro.core.config import HoneycombConfig
+
+    cfg = HoneycombConfig()
+    layout = schema.NodeImageLayout.for_config(cfg)
+    detail = {
+        "node_schema": [
+            {"name": f.name, "dims": list(f.dims), "host": f.host,
+             "device": f.device, "fill": f.fill}
+            for f in schema.NODE_SCHEMA
+        ],
+        "image_offsets": {name: [int(off), int(width)]
+                          for name, (off, width)
+                          in sorted(layout.offsets().items())},
+        "image_words": int(layout.image_words),
+        "log_entry_words": int(layout.log_entry_words),
+        "wire_entry_overhead": int(api.WIRE_ENTRY_OVERHEAD),
+        "wire_header_format": api._WIRE_HEADER.format,
+        "wire_u16_format": api._WIRE_U16.format,
+        "op_codes": {cls.__name__: code
+                     for code, cls in sorted(api.OPS_BY_CODE.items())},
+    }
+    blob = json.dumps(detail, sort_keys=True).encode()
+    return {"sha256": hashlib.sha256(blob).hexdigest(), "detail": detail}
+
+
+def pin_golden(path: Path = GOLDEN_PATH) -> dict:
+    fp = schema_fingerprint()
+    path.write_text(json.dumps(fp, indent=1, sort_keys=True) + "\n")
+    return fp
+
+
+def check_golden(path: Path = GOLDEN_PATH) -> list[Finding]:
+    rel = str(path.relative_to(REPO_ROOT)) if path.is_relative_to(REPO_ROOT) \
+        else str(path)
+    if not path.exists():
+        return [Finding("schema-golden-drift", rel, 1,
+                        "golden schema fingerprint missing — run "
+                        "`python -m repro.analysis.lint --pin-golden`")]
+    golden = json.loads(path.read_text())
+    fp = schema_fingerprint()
+    if fp["sha256"] == golden.get("sha256"):
+        return []
+    drift = []
+    old, new = golden.get("detail", {}), fp["detail"]
+    for k in sorted(set(old) | set(new)):
+        if old.get(k) != new.get(k):
+            drift.append(k)
+    return [Finding(
+        "schema-golden-drift", rel, 1,
+        f"NODE_SCHEMA / wire-codec layout drifted from the pinned golden "
+        f"(changed: {', '.join(drift) or 'unknown'}): the device image and "
+        f"the replica feed wire format are cross-version contracts — "
+        f"re-pin deliberately with --pin-golden after auditing replayers")]
+
+
+# ---------------------------------------------------------------- driver
+def load_baseline(path: Path | None = BASELINE_PATH) -> list[dict]:
+    if path is None or not Path(path).exists():
+        return []
+    return json.loads(Path(path).read_text())
+
+
+def _baselined(f: Finding, baseline: list[dict]) -> bool:
+    return any(b.get("rule") == f.rule and b.get("path") == f.path
+               for b in baseline)
+
+
+def lint_file(path: Path, root: Path = REPO_ROOT) -> list[Finding]:
+    rel = str(path.relative_to(root)) if path.is_relative_to(root) \
+        else str(path)
+    source = path.read_text()
+    try:
+        tree = ast.parse(source, filename=rel)
+    except SyntaxError as e:
+        return [Finding("syntax-error", rel, e.lineno or 1, str(e.msg))]
+    linter = _FileLinter(rel, source)
+    linter.visit(tree)
+    sup = _suppressions(source)
+    return [f for f in linter.findings
+            if f.rule not in sup.get(f.line, ())]
+
+
+def run_lint(roots=DEFAULT_ROOTS, *, root: Path = REPO_ROOT,
+             baseline: Path | None = BASELINE_PATH,
+             golden: Path | None = GOLDEN_PATH
+             ) -> tuple[list[Finding], int]:
+    """Lint every .py under ``roots``.  Returns (findings, n_baselined)."""
+    base = load_baseline(baseline)
+    findings: list[Finding] = []
+    suppressed = 0
+    for r in roots:
+        top = root / r if not Path(r).is_absolute() else Path(r)
+        files = sorted(top.rglob("*.py")) if top.is_dir() else [top]
+        for path in files:
+            for f in lint_file(path, root):
+                if _baselined(f, base):
+                    suppressed += 1
+                else:
+                    findings.append(f)
+    if golden is not None:
+        findings.extend(check_golden(golden))
+    return findings, suppressed
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(prog="repro.analysis.lint")
+    ap.add_argument("roots", nargs="*", default=list(DEFAULT_ROOTS))
+    ap.add_argument("--baseline", default=str(BASELINE_PATH))
+    ap.add_argument("--no-baseline", action="store_true")
+    ap.add_argument("--json", help="write findings as JSON to this path")
+    ap.add_argument("--pin-golden", action="store_true",
+                    help="re-pin the schema/wire golden and exit")
+    args = ap.parse_args(argv)
+    if args.pin_golden:
+        fp = pin_golden()
+        print(f"pinned golden schema fingerprint {fp['sha256'][:12]} "
+              f"-> {GOLDEN_PATH}")
+        return 0
+    baseline = None if args.no_baseline else Path(args.baseline)
+    findings, suppressed = run_lint(args.roots or DEFAULT_ROOTS,
+                                    baseline=baseline)
+    for f in findings:
+        print(f)
+    if args.json:
+        Path(args.json).write_text(json.dumps(
+            {"findings": [f.to_json() for f in findings],
+             "baselined": suppressed}, indent=1) + "\n")
+    print(f"honeylint: {len(findings)} finding(s), "
+          f"{suppressed} baselined")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

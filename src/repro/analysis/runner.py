@@ -1,0 +1,53 @@
+"""honeylint driver: run the lint pass + kernel checks, one JSON report.
+
+``scripts/verify.sh --analyze`` and the CI ``analyze`` job call this;
+EpochSan is exercised separately (it is a *runtime* sanitizer — the
+verify script re-runs the epoch/replica test subset under
+``HONEYCOMB_EPOCHSAN=1``).
+
+    python -m repro.analysis [--json experiments/analysis_report.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(prog="repro.analysis")
+    ap.add_argument("--json", default=None,
+                    help="write the combined findings report here")
+    ap.add_argument("--no-baseline", action="store_true")
+    args = ap.parse_args(argv)
+
+    from . import kernel_check, lint
+
+    lint_findings, baselined = lint.run_lint(
+        baseline=None if args.no_baseline else lint.BASELINE_PATH)
+    kernel_findings = kernel_check.run_kernel_checks()
+    findings = lint_findings + kernel_findings
+    for f in findings:
+        print(f)
+    report = {
+        "lint": [f.to_json() for f in lint_findings],
+        "kernel_check": [f.to_json() for f in kernel_findings],
+        "baselined": baselined,
+        "entry_points": len(kernel_check.kernel_entries()),
+        "ok": not findings,
+    }
+    if args.json:
+        out = Path(args.json)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(report, indent=1) + "\n")
+        print(f"report -> {out}")
+    print(f"honeylint: {len(lint_findings)} lint + "
+          f"{len(kernel_findings)} kernel finding(s), "
+          f"{baselined} baselined, "
+          f"{report['entry_points']} kernel entry points")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

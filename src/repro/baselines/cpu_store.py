@@ -27,6 +27,12 @@ class CpuStoreStats:
     bytes_touched: int = 0
     node_visits: int = 0
 
+    def collect(self):
+        """Registry samples (core/telemetry.py collect protocol):
+        ``cpu_store_*`` counters for the host-baseline op mix."""
+        from repro.core.telemetry import samples_from
+        return samples_from(self, "cpu_store", "baseline")
+
 
 class _Leaf:
     __slots__ = ("keys", "vals", "next")

@@ -57,6 +57,21 @@ while epoch N's scatters drain on the device queue).
     identical to serial mode by construction (reads always execute
     against the flipped epoch); only the overlap differs.
 
+Sanitizer seams
+===============
+
+The stage boundaries above are exactly where the epoch protocol can be
+violated, so they double as EpochSan interposition points
+(repro/analysis/epochsan.py, enabled via ``HONEYCOMB_EPOCHSAN=1``):
+``begin_export`` tags the staged standby and audits the interior-cache
+frontier against PageTable remaps, ``flip`` retags the published
+snapshot, ``_device_get``/``_device_scan`` reject dispatches against an
+unflipped standby, the scheduler's ``stage_export`` asserts every staged
+standby was published before reads dispatch, ``collect_garbage`` audits
+reclamation against the pinned epoch window, and the replica group's
+dispatch re-derives the follower freshness rule.  Off, each seam costs
+one module call returning None.
+
 Meters
 ======
 

@@ -97,6 +97,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .api import Routing, decode_wire_stream
+from ..analysis import epochsan as _epochsan
 from .config import ReplicationConfig, bucket_pow2
 from .heap import LOG_DELETE, LOG_INSERT, LOG_UPDATE
 from .read_path import NODE_FIELDS, TreeSnapshot, attach_cache_image
@@ -226,6 +227,9 @@ class FollowerReplica:
             self.in_sync = True
             was_full = True
         self._standby_rv = payload.read_version
+        san = _epochsan.get()
+        if san is not None:
+            san.note_staged(self, self._standby)
         return nbytes, was_full
 
     def stage_log(self, payload: StagedSync, marshalled) -> int:
@@ -257,6 +261,9 @@ class FollowerReplica:
         stats.log_entries += lp.entries
         stats.log_wire_bytes += lp.wire_nbytes
         stats.bytes_synced += lp.nbytes
+        san = _epochsan.get()
+        if san is not None:
+            san.note_staged(self, self._standby)
         return lp.nbytes
 
     def flip(self, primary_epoch: int) -> bool:
@@ -269,6 +276,9 @@ class FollowerReplica:
         self._standby = None
         self._standby_rv = None
         self.epoch = primary_epoch
+        san = _epochsan.get()
+        if san is not None:
+            san.note_flip(self, self.snapshot)
         return True
 
 
@@ -536,6 +546,9 @@ class ReplicaGroup:
             res = self.primary.get_batch(keys)
             self.last_dispatch = (0, self.primary.serving_version)
             return res
+        san = _epochsan.get()
+        if san is not None:   # re-derive the freshness rule at dispatch
+            san.check_follower_dispatch(self, f)
         res = self.primary._device_get(f.snapshot, keys)
         self.last_dispatch = (f.replica_id,
                               f.snapshot_rv if f.snapshot_rv is not None
@@ -551,6 +564,9 @@ class ReplicaGroup:
             res = self.primary.scan_batch(ranges)
             self.last_dispatch = (0, self.primary.serving_version)
             return res
+        san = _epochsan.get()
+        if san is not None:   # re-derive the freshness rule at dispatch
+            san.check_follower_dispatch(self, f)
         # eligibility pinned the follower at the primary snapshot's read
         # version, so truncated-scan host fallbacks use the primary's rule
         res = self.primary._device_scan(f.snapshot, ranges,

@@ -69,6 +69,7 @@ from .api import (NOT_FOUND, OK, OPS_BY_KIND, WRITE_KINDS, Op, Response,
                   Routing, Scan)
 from .pipeline import PIPELINE_MODES, PipelineStats
 from .telemetry import CLOCK
+from ..analysis import epochsan as _epochsan
 
 _now = CLOCK            # THE injectable monotonic clock (core/telemetry.py)
 
@@ -284,6 +285,9 @@ class OutOfOrderScheduler:
             # standby, flip is the atomic per-shard publish.
             self._tracer.span_all("export_stage", t0, t_mid)
             self._tracer.span_all("flip", t_mid, t1)
+        san = _epochsan.get()
+        if san is not None:   # stage_export's contract: staged => flipped
+            san.check_exported(store)
 
     def stage_dispatch(self, store, flush: bool = True
                        ) -> dict[int, Response]:

@@ -62,6 +62,9 @@ from .read_path import (NODE_FIELDS, GetResult, LegacySnapshotDelta,
 from .schema import NARROWED_FIELDS, NodeImageLayout
 from .telemetry import CLOCK, samples_from
 from repro.kernels import ops as kernel_ops
+# EpochSan seams (repro/analysis/epochsan.py): get() is None unless the
+# sanitizer is enabled, so each hook costs one call + None test
+from ..analysis import epochsan as _epochsan
 
 # jit the accelerator entry points once per (config, snapshot-shape): the
 # eager op-by-op dispatch otherwise accumulates thousands of tiny LLVM JIT
@@ -417,6 +420,9 @@ class StoreShard:
         # belongs to the next staging
         self._epoch_log = []
         self._epoch_replayable = True
+        san = _epochsan.get()
+        if san is not None:   # tag the standby; audit the cache frontier
+            san.note_staged(self, snap)
         if self.on_staged is not None:
             self.on_staged(self.last_staged)
         return True
@@ -465,6 +471,9 @@ class StoreShard:
         self._standby_pin = None
         if old_pin is not None:
             self.tree.epochs.accel_complete_batch(*old_pin)
+        san = _epochsan.get()
+        if san is not None:               # retag the published snapshot
+            san.note_flip(self, self._snapshot)
         if self.on_flip is not None:      # replica group: flip the followers
             self.on_flip()
         # the payload only describes the (now published) standby; followers
@@ -648,6 +657,9 @@ class StoreShard:
         """Execute one dense GET batch against ``snap`` — the active
         snapshot, or a follower replica's device image (core/replica.py
         serves followers through the primary's dispatch machinery)."""
+        san = _epochsan.get()
+        if san is not None:   # reads may never see an unflipped standby
+            san.check_read(self, snap)
         # pad ragged batches (router sub-batches) to power-of-two buckets so
         # each (cfg, shapes) compiles once per bucket, not per length
         padded = keys + [keys[0]] * (bucket_pow2(len(keys)) - len(keys))
@@ -701,6 +713,9 @@ class StoreShard:
         """Execute one dense SCAN batch against ``snap`` (active snapshot or
         a follower replica's image); truncated requests fall back to the
         host tree at ``fallback_rv``."""
+        san = _epochsan.get()
+        if san is not None:   # reads may never see an unflipped standby
+            san.check_read(self, snap)
         pad = [ranges[0]] * (bucket_pow2(len(ranges)) - len(ranges))
         padded = ranges + pad
         self.pipeline_stats.dispatched_lanes += len(ranges)
@@ -750,7 +765,13 @@ class StoreShard:
 
     # ------------------------------------------------------------- misc
     def collect_garbage(self) -> int:
+        san = _epochsan.get()
+        # audit the collect against the PRE-collect epoch window: nothing
+        # a pinned accelerator/CPU epoch still covers may be reclaimed
+        guard = san.gc_begin(self) if san is not None else None
         n = self.tree.gc.collect()
+        if guard is not None:
+            san.gc_end(self, guard)
         if n:
             # GC wipes freed slots (marking them dirty) and queues LID
             # frees — row mutations no wire entry describes, so the

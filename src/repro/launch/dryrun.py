@@ -19,13 +19,13 @@ Usage:
 import argparse
 import dataclasses
 import json
-import time
 import traceback
 from pathlib import Path
 
 import jax
 
 from repro.configs import ARCH_IDS, ALIASES, get_config
+from repro.core.telemetry import CLOCK
 from repro.distributed.sharding import ShardingPolicy
 from repro.launch import hlo_analysis as hla
 from repro.launch.mesh import make_production_mesh
@@ -68,7 +68,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     shape = shape_by_name(shape_name)
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.devices.size
-    t0 = time.perf_counter()    # monotonic: compile_s is an interval
+    t0 = CLOCK()    # monotonic: compile_s is an interval
     # full-depth compile: the dry-run proof + memory analysis
     mem, cost_full, hlo = _compile(cfg, shape, mesh, policy, moe_impl,
                                    grad_accum=grad_accum)
@@ -100,7 +100,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     else:
         cost = cost_full
         coll = hla.collective_bytes(hlo)
-    t1 = time.perf_counter()
+    t1 = CLOCK()
 
     mf = hla.model_flops_per_step(cfg, shape) / n_chips
     rl = hla.roofline(cost, coll, mf)

@@ -7,11 +7,11 @@ Smoke scale:
 from __future__ import annotations
 
 import argparse
-import time
 
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
+from repro.core.telemetry import CLOCK
 from repro.serving.engine import ServingEngine
 
 
@@ -29,12 +29,12 @@ def main():
     eng = ServingEngine(cfg, batch_size=args.batch, max_seq=256,
                         page_size=16)
     rng = np.random.default_rng(0)
-    t0 = time.perf_counter()
+    t0 = CLOCK()
     for _ in range(args.requests):
         eng.submit(rng.integers(1, cfg.vocab, (args.prompt_len,)),
                    max_new_tokens=args.new_tokens)
     outs = eng.run_until_done()
-    dt = time.perf_counter() - t0
+    dt = CLOCK() - t0
     print(f"served {len(outs)} requests, {eng.stats['tokens']} tokens "
           f"in {dt:.2f}s ({eng.stats['tokens'] / dt:.1f} tok/s)")
     print(f"stats: {eng.stats}; honeycomb page-table "

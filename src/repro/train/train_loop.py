@@ -17,13 +17,13 @@ Fault-tolerance model (documented in README):
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable
 
 import jax
 import numpy as np
 
 from repro.data.pipeline import DataPipeline
+from repro.core.telemetry import CLOCK
 from repro.train import optimizer as opt
 from repro.train.checkpoint import CheckpointManager
 
@@ -73,11 +73,11 @@ class TrainLoop:
         target = self.step + (steps or self.cfg.total_steps)
         while self.step < target:
             batch = next(self.pipeline)
-            t0 = time.perf_counter()
+            t0 = CLOCK()
             self.params, self.opt_state, metrics = self.step_fn(
                 self.params, self.opt_state, batch)
             jax.block_until_ready(metrics["loss"])
-            dt = time.perf_counter() - t0
+            dt = CLOCK() - t0
             self.step += 1
 
             self._timed_steps += 1
